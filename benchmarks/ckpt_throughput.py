@@ -1,0 +1,142 @@
+"""Checkpoint-path performance: dump/restore bandwidth, incremental savings,
+async overlap, codec ratios. (The paper reports no timings — this is the
+quantitative extension of its §2 procedure.)"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Checkpointer
+from repro.core.compression import default_policy
+
+
+def synth_state(mb: int, seed=0):
+    """A train-state-shaped tree of ~mb MB (params + m + v fp32)."""
+    n = mb * (1 << 20) // 4 // 3
+    k = jax.random.PRNGKey(seed)
+    leaf = jax.random.normal(k, (n,), jnp.float32)
+    return {"params": {"w": leaf}, "opt": {"m": {"w": leaf * 0.1},
+                                           "v": {"w": leaf * 0.01}},
+            "step": jnp.asarray(1, jnp.int32)}
+
+
+def bench_full_dump_restore(emit, sizes_mb=(16, 64, 256)):
+    for mb in sizes_mb:
+        tree = synth_state(mb)
+        jax.block_until_ready(tree)
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = Checkpointer(tmp, keep_last=2)
+            t0 = time.time()
+            out = ck.save(tree, step=1)
+            dt = time.time() - t0
+            gbs = out["stats"]["bytes_raw"] / dt / 1e9
+            emit(f"ckpt_dump_{mb}MB,{dt * 1e6:.0f},{gbs:.3f} GB/s")
+            t0 = time.time()
+            ck.load_latest()
+            dt = time.time() - t0
+            emit(f"ckpt_restore_{mb}MB,{dt * 1e6:.0f},"
+                 f"{out['stats']['bytes_raw'] / dt / 1e9:.3f} GB/s")
+
+
+def bench_incremental(emit, mb=64, fractions=(0.0, 0.01, 0.1, 0.5)):
+    tree = synth_state(mb)
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, keep_last=10, chunk_bytes=1 << 20)
+        ck.save(tree, step=1)
+        n = tree["params"]["w"].shape[0]
+        for i, frac in enumerate(fractions):
+            t2 = jax.tree.map(lambda x: x, tree)
+            if frac:
+                k = int(n * frac)
+                t2["params"]["w"] = tree["params"]["w"].at[:k].add(1.0)
+                t2["opt"]["m"]["w"] = tree["opt"]["m"]["w"].at[:k].add(0.1)
+                t2["opt"]["v"]["w"] = tree["opt"]["v"]["w"].at[:k].add(0.1)
+            t0 = time.time()
+            out = ck.save(t2, step=2 + i)
+            dt = time.time() - t0
+            s = out["stats"]
+            written_frac = s["bytes_stored"] / max(s["bytes_raw"], 1)
+            emit(f"ckpt_incr_changed{int(frac * 100):02d}pct,"
+                 f"{dt * 1e6:.0f},wrote {written_frac * 100:.1f}% of "
+                 f"{s['bytes_raw'] >> 20}MB")
+
+
+def bench_async_overlap(emit, mb=64, step_ms=100.0, n_steps=8):
+    """Training at step_ms/step with a dump every 4 steps: measure step-time
+    inflation sync vs async (dump cost ~= capture only)."""
+    tree = synth_state(mb)
+
+    def loop(mode):
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = Checkpointer(tmp, keep_last=2)
+            t0 = time.time()
+            for s in range(n_steps):
+                time.sleep(step_ms / 1e3)        # stands in for the step
+                if s % 4 == 3:
+                    if mode == "sync":
+                        ck.save(tree, step=s)
+                    else:
+                        ck.save_async(tree, step=s)
+            ck.wait()
+            return (time.time() - t0) / n_steps * 1e3
+
+    base = step_ms
+    sync_ms = loop("sync")
+    async_ms = loop("async")
+    emit(f"ckpt_sync_overhead,{sync_ms * 1e3:.0f},"
+         f"+{(sync_ms - base) / base * 100:.1f}% per step")
+    emit(f"ckpt_async_overhead,{async_ms * 1e3:.0f},"
+         f"+{(async_ms - base) / base * 100:.1f}% per step")
+
+
+def bench_codecs(emit, mb=64):
+    tree = synth_state(mb)
+    for name, policy in (("none", None),
+                         ("delta8_opt", default_policy(lossy_optimizer=True))):
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = Checkpointer(tmp, keep_last=10, codec_policy=policy)
+            ck.save(tree, step=1)
+            t2 = jax.tree.map(lambda x: x + 0.001, tree)
+            t0 = time.time()
+            out = ck.save(t2, step=2)
+            dt = time.time() - t0
+            ratio = out["stats"]["bytes_raw"] / max(
+                out["stats"]["bytes_stored"], 1)
+            emit(f"ckpt_codec_{name},{dt * 1e6:.0f},"
+                 f"{ratio:.2f}x vs raw on 2nd image")
+
+
+def bench_fsync_modes(emit, mb=128):
+    """§Perf ckpt-path iteration: per-chunk fsync dominated dump time;
+    commit-only fsync (manifest) gives ~2.7x (see EXPERIMENTS.md)."""
+    from repro.core.storage import LocalDirTier
+    tree = synth_state(mb)
+    jax.block_until_ready(tree)
+    for name, fsync, chunk in (("fsync_all_4MB", True, 4 << 20),
+                               ("fsync_commit_4MB", "commit", 4 << 20),
+                               ("fsync_commit_32MB", "commit", 32 << 20)):
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = Checkpointer(LocalDirTier(tmp, fsync=fsync),
+                              chunk_bytes=chunk)
+            t0 = time.time()
+            out = ck.save(tree, step=1)
+            dt = time.time() - t0
+            emit(f"ckpt_dump_{name},{dt * 1e6:.0f},"
+                 f"{out['stats']['bytes_raw'] / dt / 1e9:.3f} GB/s")
+
+
+def run(emit=print):
+    bench_full_dump_restore(emit)
+    bench_incremental(emit)
+    bench_async_overlap(emit)
+    bench_codecs(emit)
+    bench_fsync_modes(emit)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,117 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Terms per (arch x shape), single-pod mesh, per-device totals measured from
+unrolled reduced-depth compiles (see launch/dryrun.py measure_totals):
+
+  compute_s    = HLO_FLOPs / peak
+  memory_s     = HLO_bytes / HBM_bw
+  collective_s = modeled ring traffic / link_bw   (spec-literal operand-sum
+                 variant also reported)
+
+bound        = dominant term
+roofline_frac= compute_s / max(terms)   (1.0 == compute-bound, the ceiling)
+mfu_ceiling  = MODEL_FLOPS / (max(terms) * peak)  (useful-flop utilization
+               upper bound implied by the dominant term)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ADVICE = {
+    "compute": ("compute-bound: reduce non-model flops (remat policy, causal "
+                "block-skipping, MoE capacity factor)"),
+    "memory": ("HBM-bound: fuse streams / raise arithmetic intensity "
+               "(bigger microbatch per pass, bf16 master weights)"),
+    "collective": ("ICI-bound: cut FSDP regather volume (fewer microbatches, "
+                   "2D-shard weights), overlap collectives with compute"),
+}
+
+
+def load_records(out_dir="experiments/dryrun", tag="baseline", pod="pod1"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, f"*__{pod}__{tag}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyze(rec) -> dict | None:
+    tot = rec.get("totals_per_device") or {}
+    if "flops" not in tot:
+        return None
+    compute_s = tot["flops"] / PEAK
+    memory_s = tot["bytes"] / HBM
+    # depth extrapolation can go slightly negative for collectives when
+    # loop-invariant gathers (CE head) appear in L1 but amortize in L2 —
+    # clamp at 0 (true per-layer collective volume is ~0 for those cells)
+    coll_modeled_s = max(0.0, tot["coll_modeled"]) / ICI
+    coll_spec_s = max(0.0, tot["coll_operand"]) / ICI
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_modeled_s}
+    bound = max(terms, key=terms.get)
+    lb = max(terms.values())
+    n_dev = rec["mesh"]["n_devices"]
+    model_flops_dev = (rec["analytic"]["model_flops_per_token"] / 6.0
+                       * (6.0 if rec["kind"] == "train" else 2.0)
+                       * rec["analytic"]["tokens"] / n_dev)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_modeled_s, "collective_spec_s": coll_spec_s,
+        "bound": bound, "roofline_frac": compute_s / lb if lb else 0.0,
+        "model_flops_ratio": model_flops_dev / tot["flops"]
+        if tot["flops"] else 0.0,
+        "mfu_ceiling": model_flops_dev / (lb * PEAK) if lb else 0.0,
+        "temp_gb": rec["memory_analysis_per_device"].get(
+            "temp_size_in_bytes", 0) / 1e9,
+        "options": rec["options"],
+        "advice": ADVICE[bound],
+    }
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | bound | "
+           "roofline frac | MODEL/HLO flops | MFU ceiling | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bound']} | "
+            f"{r['roofline_frac']:.2f} | {r['model_flops_ratio']:.2f} | "
+            f"{r['mfu_ceiling']:.2f} | {r['temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run(emit=print, out_dir="experiments/dryrun", tag="baseline"):
+    rows = []
+    for rec in load_records(out_dir, tag):
+        r = analyze(rec)
+        if r is None:
+            continue
+        rows.append(r)
+        emit(f"roofline_{r['arch']}_{r['shape']},"
+             f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.0f},"
+             f"bound={r['bound']} frac={r['roofline_frac']:.2f} "
+             f"mfu_ceiling={r['mfu_ceiling']:.2f}")
+    if rows:
+        path = os.path.join(out_dir, f"roofline_{tag}.md")
+        with open(path, "w") as f:
+            f.write(markdown(rows) + "\n")
+        emit(f"roofline_table,0,{path}")
+    else:
+        emit("roofline_table,0,no dry-run records found — run "
+             "scripts/run_dryrun_sweep.sh first")
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    print()
+    print(markdown(rows))

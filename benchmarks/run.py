@@ -1,0 +1,38 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+  table1_*   — the paper's Table 1 use-case matrix, reproduced (dump ->
+               restore -> inspect per row).
+  ckpt_*     — checkpoint-path throughput (the quantitative extension of the
+               paper's procedure: bandwidth, incremental, async, codecs).
+  roofline_* — per-(arch x shape) roofline terms from the multi-pod dry-run
+               artifacts (requires scripts/run_dryrun_sweep.sh output).
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    from benchmarks import table1_capability_matrix as t1
+    results = t1.run(emit=print)
+    bad = [r for r in results if r["repro"] != "Working"]
+    print(f"table1_summary,0,{10 - len(bad)}/10 rows Working "
+          f"(paper: 5 Working / 2 Partial / 3 Not working)")
+
+    from benchmarks import ckpt_throughput
+    ckpt_throughput.run(emit=print)
+
+    from benchmarks import roofline
+    roofline.run(emit=print)
+
+    if bad:
+        print(f"table1_failures,0,{[r['row'] for r in bad]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end driver: train a small LM for a few hundred steps on CPU with
+the full production lifecycle (checkpoint every N steps, async writes,
+preemption handler armed, resumable).
+
+Default is a ~5M-param qwen3-family model, 300 steps — tune --steps/--dims
+to your patience. This is the same driver the fleet would run
+(repro.launch.train); this wrapper just picks CPU-friendly dimensions.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    train_main([
+        "--arch", "qwen3-8b", "--tiny",
+        "--layers", "4", "--d-model", "256", "--d-ff", "1024",
+        "--vocab", "4096",
+        "--steps", str(args.steps),
+        "--global-batch", "8", "--seq-len", "128",
+        "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50", "--ckpt-async",
+        "--log-every", "10",
+        "--metrics-file", "/tmp/repro_train_lm_metrics.json",
+    ])

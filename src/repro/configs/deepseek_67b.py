@@ -1,0 +1,24 @@
+"""deepseek-67b [dense] — llama-arch [arXiv:2401.02954; hf].
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    rope_theta=10000.0,
+)
+
+
+def tiny() -> ModelConfig:
+    return CONFIG.replace(
+        name="deepseek-67b-tiny", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    )

@@ -1,0 +1,60 @@
+"""Async checkpointing: keep dump I/O off the training critical path.
+
+dump_async() captures device state synchronously (device_get at the step
+barrier — seconds, bounded by PCIe/DMA) and hands serialization + hashing +
+tier writes to a background worker (the paper's pthreading row: the runtime's
+own helper threads are part of the checkpointable design, and quiesced by
+construction since state capture happens before enqueue). wait() surfaces
+worker errors and enforces ordering."""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+
+from repro.core import dump as dump_mod
+
+
+class AsyncCheckpointer:
+    def __init__(self, root, *, replicas=(), max_pending: int = 2):
+        self.root = root
+        self.replicas = replicas
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._results: list = []
+        self._errors: list = []
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def _loop(self):
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            host_tree, kw = job
+            try:
+                self._results.append(
+                    dump_mod.dump(host_tree, self.root,
+                                  replicas=self.replicas, **kw))
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def dump_async(self, tree, **kw):
+        """Synchronously captures (device_get) then enqueues the write.
+        Blocks only if max_pending dumps are already in flight."""
+        host_tree = jax.device_get(tree)   # safe against donation: host copy
+        self._q.put((host_tree, kw))
+
+    def wait(self):
+        """Barrier: all enqueued dumps durable (or raise)."""
+        self._q.join()
+        if self._errors:
+            raise self._errors.pop(0)
+        return list(self._results)
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._worker.join(timeout=10)

@@ -1,0 +1,55 @@
+"""Leaf <-> chunk-stream conversion ("memory pages" of the dump).
+
+A leaf (host numpy array) is serialized to raw bytes and split into
+fixed-size chunks; each chunk is SHA-256 content-addressed. Chunk
+granularity is what makes incremental dumps work: an unchanged chunk of an
+updated leaf hashes identically and is deduplicated against the pool /
+parent image — CRIU's dirty-page tracking at VMEM-block granularity."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.integrity import sha256
+
+CHUNK_BYTES = 4 << 20  # 4 MiB
+
+
+def leaf_to_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).tobytes()
+
+
+def bytes_to_leaf(data: bytes, dtype: str, shape) -> np.ndarray:
+    return np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape).copy()
+
+
+def split_chunks(data: bytes, chunk_bytes: int = CHUNK_BYTES):
+    """-> list of (hash, bytes)."""
+    out = []
+    for off in range(0, max(len(data), 1), chunk_bytes):
+        part = data[off:off + chunk_bytes]
+        out.append((sha256(part), part))
+    return out
+
+
+def leaf_record(path: str, arr: np.ndarray, chunk_bytes: int = CHUNK_BYTES,
+                codec: str = "none", codec_meta: dict | None = None) -> dict:
+    data = leaf_to_bytes(arr)
+    chunks = split_chunks(data, chunk_bytes)
+    return {
+        "path": path,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "nbytes": len(data),
+        "chunk_bytes": chunk_bytes,
+        "chunks": [h for h, _ in chunks],
+        "codec": codec,
+        "codec_meta": codec_meta or {},
+        "_chunk_data": chunks,  # stripped before manifest serialization
+    }
+
+
+def assemble_leaf(record: dict, read_chunk) -> np.ndarray:
+    """read_chunk: hash -> bytes (verification done by caller)."""
+    data = b"".join(read_chunk(h) for h in record["chunks"])
+    assert len(data) == record["nbytes"], (record["path"], len(data))
+    return bytes_to_leaf(data, record["dtype"], record["shape"])

@@ -1,0 +1,76 @@
+"""Leaf codecs for checkpoint images.
+
+  none   — raw bytes.
+  bf16   — fp32 leaves stored as bf16 (2x, lossy; fine for optimizer moments).
+  delta8 — int8 block-delta vs the SAME leaf in the parent image (4x vs fp32,
+           lossy, error <= max|delta|/254 per block; clean blocks exact).
+           Uses the ckpt_codec kernel math (Pallas on TPU, jnp here).
+
+Policies map leaf path -> codec; params default to lossless, optimizer
+moments may opt into lossy codecs (benchmarked in ckpt_throughput)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_codec.ops import delta_encode, delta_decode
+
+CODEC_BLOCK = 16384
+
+
+def encode_leaf(arr: np.ndarray, codec: str, prev: np.ndarray | None = None):
+    """-> (stored_array, codec_meta). stored_array is what gets chunked."""
+    if codec == "none":
+        return arr, {}
+    if codec == "bf16":
+        if arr.dtype != np.float32:
+            return arr, {"applied": False}
+        return np.asarray(jnp.asarray(arr).astype(jnp.bfloat16)), \
+            {"applied": True, "orig_dtype": "float32"}
+    if codec == "delta8":
+        if prev is None or prev.shape != arr.shape or arr.dtype != np.float32:
+            return arr, {"applied": False}
+        flat = jnp.asarray(arr).reshape(-1)
+        pflat = jnp.asarray(prev).reshape(-1)
+        q, scale, dirty = delta_encode(flat, pflat, block=CODEC_BLOCK)
+        q, scale = np.asarray(q), np.asarray(scale)
+        stored = np.concatenate([scale.view(np.int8).reshape(-1),
+                                 q.reshape(-1)])
+        return stored, {"applied": True, "orig_dtype": "float32",
+                        "orig_shape": list(arr.shape),
+                        "block": CODEC_BLOCK, "nblk": int(q.shape[0]),
+                        "dirty_blocks": int(dirty.sum())}
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode_leaf(stored: np.ndarray, codec: str, codec_meta: dict,
+                prev: np.ndarray | None = None) -> np.ndarray:
+    if codec == "none" or not codec_meta.get("applied", False):
+        return stored
+    if codec == "bf16":
+        return np.asarray(jnp.asarray(stored).astype(jnp.float32))
+    if codec == "delta8":
+        assert prev is not None, "delta8 decode requires the parent leaf"
+        nblk, block = codec_meta["nblk"], codec_meta["block"]
+        scale_bytes = nblk * 4
+        flat = stored.reshape(-1)
+        scale = flat[:scale_bytes].view(np.float32)
+        q = flat[scale_bytes:].reshape(nblk, block)
+        n = int(np.prod(codec_meta["orig_shape"]))
+        out = delta_decode(jnp.asarray(q), jnp.asarray(scale),
+                           jnp.asarray(prev, dtype=np.float32).reshape(-1),
+                           n=n)
+        return np.asarray(out).reshape(codec_meta["orig_shape"])
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def default_policy(lossy_optimizer: bool = False):
+    """path -> codec. Master params stay lossless; optimizer moments may
+    use delta8 (vs parent) when enabled."""
+    def policy(path: str) -> str:
+        if lossy_optimizer and (path.startswith("opt/")
+                                or "/opt/" in path):
+            return "delta8"
+        return "none"
+    return policy

@@ -1,0 +1,29 @@
+"""Elastic restore: resume on a different mesh / host count / DP degree.
+
+Because images store abstract arrays + logical shardings, topology change is
+(a) recompute shardings from the logical rules on the NEW mesh,
+(b) device_put (restore.py does this), and
+(c) remap data-pipeline cursors — trivial here since the iterator is
+global-step addressed (same global batch -> bitwise-identical stream for any
+DP degree; changing global batch resumes at the same token offset)."""
+from __future__ import annotations
+
+import jax
+
+
+def validate_elastic(manifest_meta: dict, *, new_dp_size: int,
+                     global_batch: int | None = None) -> dict:
+    data = manifest_meta.get("data", {})
+    gb = global_batch or data.get("global_batch")
+    assert gb is not None, "manifest lacks data state"
+    if gb % new_dp_size:
+        raise ValueError(f"global batch {gb} not divisible by new DP degree "
+                         f"{new_dp_size}")
+    return {"global_batch": gb, "local_batch": gb // new_dp_size,
+            "step": data.get("step", manifest_meta.get("step", 0))}
+
+
+def reshard(host_tree, shardings):
+    """Place host arrays onto a (new) mesh."""
+    return jax.tree.map(lambda a, s: jax.device_put(a, s),
+                        host_tree, shardings)

@@ -1,0 +1,27 @@
+"""Integrity: content hashing, verification, replica repair.
+
+Every chunk is content-addressed by SHA-256; the manifest carries the hash
+list per leaf plus its own digest. Restore verifies every chunk it reads;
+on mismatch/missing it repairs from a replica tier (the paper's network-
+file-system row, plus protection CRIU does not attempt)."""
+from __future__ import annotations
+
+import hashlib
+import json
+
+
+def sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def manifest_digest(manifest_dict: dict) -> str:
+    body = {k: v for k, v in manifest_dict.items() if k != "digest"}
+    return sha256(json.dumps(body, sort_keys=True).encode())
+
+
+class CorruptionError(RuntimeError):
+    def __init__(self, image_id: str, bad_chunks: list):
+        self.image_id = image_id
+        self.bad_chunks = bad_chunks
+        super().__init__(f"image {image_id}: {len(bad_chunks)} corrupt/missing "
+                         f"chunks: {bad_chunks[:5]}{'...' if len(bad_chunks) > 5 else ''}")

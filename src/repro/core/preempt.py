@@ -1,0 +1,47 @@
+"""Scheduler-driven preemption — the OSPool/HTCondor scenario from the paper.
+
+The batch system signals the job (SIGTERM); the runtime finishes the current
+step, dumps at the boundary, and exits with code 85 — HTCondor's
+self-checkpointing convention ("the job checkpointed; reschedule it
+anywhere"). This is the paper's central workflow, implemented at the level
+where it actually works for accelerator jobs: inside the runtime (no outside
+dumper agent, hence no container-runtime restriction — rows 4/5)."""
+from __future__ import annotations
+
+import signal
+import threading
+
+EXIT_CHECKPOINTED = 85  # HTCondor self-checkpoint exit code
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGUSR2)):
+        self.signals = signals
+        self._flag = threading.Event()
+        self._orig = {}
+
+    def install(self):
+        for s in self.signals:
+            self._orig[s] = signal.signal(s, self._on_signal)
+        return self
+
+    def _on_signal(self, signum, frame):
+        self._flag.set()
+
+    def preempt_requested(self) -> bool:
+        return self._flag.is_set()
+
+    def request(self):
+        """Programmatic trigger (tests / straggler policy escalation)."""
+        self._flag.set()
+
+    def uninstall(self):
+        for s, h in self._orig.items():
+            signal.signal(s, h)
+        self._orig.clear()
+
+    def __enter__(self):
+        return self.install()
+
+    def __exit__(self, *a):
+        self.uninstall()

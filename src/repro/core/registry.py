@@ -1,0 +1,75 @@
+"""Checkpoint catalog: retention policy + content-pool garbage collection."""
+from __future__ import annotations
+
+from repro.core.restore import read_manifest
+from repro.core.storage import as_tier
+
+
+class Registry:
+    def __init__(self, root):
+        self.tier = as_tier(root)
+
+    def images(self) -> list:
+        out = []
+        for i in self.tier.image_ids():
+            if self.tier.exists(self.tier.manifest_path(i)):
+                man = read_manifest(self.tier, i)
+                out.append({"image_id": i, "step": man["step"],
+                            "created_at": man["created_at"],
+                            "parent": man["parent"]})
+        return sorted(out, key=lambda m: m["step"])
+
+    def latest(self):
+        imgs = self.images()
+        return imgs[-1] if imgs else None
+
+    def _parents_of(self, keep_ids: set) -> set:
+        """delta8 chains need their parents alive."""
+        out = set(keep_ids)
+        frontier = list(keep_ids)
+        while frontier:
+            i = frontier.pop()
+            man = read_manifest(self.tier, i)
+            p = man["parent"]
+            if p and p not in out and self.tier.exists(
+                    self.tier.manifest_path(p)):
+                out.add(p)
+                frontier.append(p)
+        return out
+
+    def retain(self, keep_last: int = 3, keep_every: int = 0) -> list:
+        """Delete images outside the policy (keeping delta-chain parents).
+        Returns deleted image ids."""
+        imgs = self.images()
+        keep = {m["image_id"] for m in imgs[-keep_last:]} if keep_last else set()
+        if keep_every:
+            keep |= {m["image_id"] for m in imgs
+                     if m["step"] % keep_every == 0}
+        keep = self._parents_of(keep)
+        deleted = []
+        for m in imgs:
+            if m["image_id"] not in keep:
+                self.tier.delete(f"images/{m['image_id']}")
+                deleted.append(m["image_id"])
+        return deleted
+
+    def gc(self) -> dict:
+        """Delete pool chunks not referenced by any retained manifest."""
+        referenced = set()
+        for m in self.images():
+            man = read_manifest(self.tier, m["image_id"])
+            for rec in man["leaves"]:
+                referenced.update(rec["chunks"])
+        removed, kept = 0, 0
+        try:
+            names = self.tier.listdir("chunks")
+        except FileNotFoundError:
+            names = []
+        for name in names:
+            h = name.removesuffix(".bin")
+            if h not in referenced:
+                self.tier.delete(f"chunks/{name}")
+                removed += 1
+            else:
+                kept += 1
+        return {"removed": removed, "kept": kept}

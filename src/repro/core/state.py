@@ -1,0 +1,29 @@
+"""JobState glue: what a complete training/serving job checkpoint contains.
+
+arrays  — the device pytree (TrainState, or serving {params?, cache, ...})
+meta    — everything non-array: step, data-iterator cursor, opt config,
+          arch name, shapes; JSON-serializable, stored in the manifest.
+
+The split mirrors CRIU's images (pages vs. descriptors): arrays are the
+pages; meta is the descriptor table."""
+from __future__ import annotations
+
+import dataclasses
+
+
+def train_meta(*, arch: str, step: int, data_state: dict,
+               opt_cfg=None, extra: dict | None = None) -> dict:
+    meta = {"job_kind": "train", "arch": arch, "step": int(step),
+            "data": data_state}
+    if opt_cfg is not None:
+        meta["opt"] = dataclasses.asdict(opt_cfg)
+    if extra:
+        meta["extra"] = extra
+    return meta
+
+
+def serve_meta(*, arch: str, tokens_done, prompts: dict | None = None,
+               extra: dict | None = None) -> dict:
+    return {"job_kind": "serve", "arch": arch,
+            "tokens_done": int(tokens_done), "prompts": prompts or {},
+            "extra": extra or {}}

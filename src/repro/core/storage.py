@@ -1,0 +1,144 @@
+"""Storage tiers for checkpoint images.
+
+Layout (content-addressed, CRIU page-server/parent-image analogue):
+
+  <root>/chunks/<sha256>.bin        shared deduplicated chunk pool
+  <root>/images/<image_id>/manifest.json
+
+Chunk writes are idempotent (content addressing); the manifest is committed
+last via tmp+fsync+rename — a crash mid-dump leaves only unreferenced chunks
+(collected by registry.gc()), never a torn image."""
+from __future__ import annotations
+
+import os
+import time
+
+
+class Tier:
+    """Abstract tier. rel paths use '/'."""
+
+    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
+        raise NotImplementedError
+
+    def read_bytes(self, rel: str) -> bytes:
+        raise NotImplementedError
+
+    def exists(self, rel: str) -> bool:
+        raise NotImplementedError
+
+    def listdir(self, rel: str) -> list:
+        raise NotImplementedError
+
+    def delete(self, rel: str):
+        raise NotImplementedError
+
+    # ---- layout helpers
+    def chunk_path(self, h: str) -> str:
+        return f"chunks/{h}.bin"
+
+    def manifest_path(self, image_id: str) -> str:
+        return f"images/{image_id}/manifest.json"
+
+    def has_chunk(self, h: str) -> bool:
+        return self.exists(self.chunk_path(h))
+
+    def write_chunk(self, h: str, data: bytes):
+        if not self.has_chunk(h):  # dedup
+            self.write_bytes(self.chunk_path(h), data)
+
+    def read_chunk(self, h: str) -> bytes:
+        return self.read_bytes(self.chunk_path(h))
+
+    def image_ids(self) -> list:
+        try:
+            return sorted(self.listdir("images"))
+        except FileNotFoundError:
+            return []
+
+
+class LocalDirTier(Tier):
+    """POSIX directory tier (local disk or a mounted network FS).
+
+    fsync modes: True (every file — strongest), "commit" (only commit-point
+    writes, i.e. manifests; chunk durability relies on FS write-back
+    ordering/journal barriers — the usual production trade), False (none;
+    tests / throwaway tiers)."""
+
+    def __init__(self, root: str, fsync=True, write_latency_s: float = 0.0):
+        self.root = root
+        self.fsync = fsync
+        self.write_latency_s = write_latency_s  # remote-FS emulation knob
+        os.makedirs(root, exist_ok=True)
+
+    def _p(self, rel: str) -> str:
+        return os.path.join(self.root, *rel.split("/"))
+
+    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
+        if self.write_latency_s:
+            time.sleep(self.write_latency_s)
+        p = self._p(rel)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + f".tmp.{os.getpid()}"
+        do_sync = self.fsync is True or (self.fsync == "commit" and atomic)
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if do_sync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, p)  # atomic on POSIX
+
+    def read_bytes(self, rel: str) -> bytes:
+        with open(self._p(rel), "rb") as f:
+            return f.read()
+
+    def exists(self, rel: str) -> bool:
+        return os.path.exists(self._p(rel))
+
+    def listdir(self, rel: str) -> list:
+        return os.listdir(self._p(rel))
+
+    def delete(self, rel: str):
+        p = self._p(rel)
+        if os.path.isdir(p):
+            import shutil
+            shutil.rmtree(p)
+        elif os.path.exists(p):
+            os.remove(p)
+
+
+class MemoryTier(Tier):
+    """In-process tier — the CRIU 'page server' analogue. Used as the fast
+    first hop for async dumps and as a test double."""
+
+    def __init__(self):
+        self.blobs: dict = {}
+
+    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
+        self.blobs[rel] = bytes(data)
+
+    def read_bytes(self, rel: str) -> bytes:
+        if rel not in self.blobs:
+            raise FileNotFoundError(rel)
+        return self.blobs[rel]
+
+    def exists(self, rel: str) -> bool:
+        return rel in self.blobs
+
+    def listdir(self, rel: str) -> list:
+        rel = rel.rstrip("/") + "/"
+        names = set()
+        for k in self.blobs:
+            if k.startswith(rel):
+                names.add(k[len(rel):].split("/")[0])
+        if not names:
+            raise FileNotFoundError(rel)
+        return sorted(names)
+
+    def delete(self, rel: str):
+        for k in [k for k in self.blobs
+                  if k == rel or k.startswith(rel.rstrip("/") + "/")]:
+            del self.blobs[k]
+
+
+def as_tier(t) -> Tier:
+    return t if isinstance(t, Tier) else LocalDirTier(str(t))

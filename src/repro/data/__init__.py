@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenDataset, DataIterator  # noqa: F401

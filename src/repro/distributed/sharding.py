@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules (MaxText-style), computed per (arch, mesh).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod. Weights are Megatron-TP sharded on `model` (d_ff / heads / vocab)
+and FSDP/ZeRO-3 sharded on `(pod, data)` (d_model); optimizer states inherit
+param shardings. Divisibility is checked per axis with graceful fallback to
+replication (e.g. GQA kv_heads=8 < model=16 -> KV projections replicate over
+`model`, which costs ~3% redundant flops; see DESIGN.md §3.1).
+"""
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+               expert_parallel: bool = False) -> dict:
+    """logical axis -> mesh axis (or tuple / None)."""
+    model = _axis_size(mesh, "model")
+    dax = data_axes(mesh)
+    dsize = data_size(mesh)
+
+    def if_div(n: int, target):
+        return target if model > 1 and n % model == 0 else None
+
+    rules = {
+        "embed": dax if (fsdp and cfg.d_model % dsize == 0) else None,
+        "mlp": if_div(cfg.d_ff, "model") if cfg.d_ff else None,
+        "shared_mlp": if_div(cfg.shared_attn_dff, "model") if cfg.shared_attn_dff else None,
+        "heads": if_div(cfg.num_heads, "model"),
+        "kv_heads": if_div(cfg.num_kv_heads, "model"),
+        "head_dim": None,
+        "vocab": if_div(cfg.padded_vocab, "model"),
+        "inner": if_div(cfg.d_inner, "model") if cfg.ssm_expand else None,
+        "state": None,
+        "conv": None,
+        "expert": None,
+        # activations
+        "batch": dax,
+        "seq": None,
+        "seq_kv": None,  # set per-shape in cache_rules
+    }
+    if expert_parallel and cfg.num_experts and cfg.num_experts % model == 0:
+        rules["expert"] = "model"
+        rules["mlp"] = None  # EP replaces TP inside experts
+    return rules
+
+
+def batch_axes(mesh: Mesh, global_batch: int):
+    """Shard batch over (pod, data) when divisible, else replicate (bs=1
+    long-context decode)."""
+    return data_axes(mesh) if global_batch % data_size(mesh) == 0 else None
+
+
+def cache_rules(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> dict:
+    """Sharding for decode-time state. Attention KV caches are sharded over
+    `model` on the *sequence* dim (flash-decoding style split-K: XLA inserts
+    the (max,sum,value) combine all-reduces); batch over data when divisible."""
+    model = _axis_size(mesh, "model")
+    return {
+        "batch": batch_axes(mesh, shape.global_batch),
+        "seq_kv": "model" if model > 1 and shape.seq_len % model == 0 else None,
+        "kv_heads": None,   # cache keeps kv heads unsharded (GQA kv < model)
+        "head_dim": None,
+        "heads": None,
+        "inner": "model" if cfg.ssm_expand and cfg.d_inner % model == 0 else None,
+        "state": None,
+        "conv": None,
+    }
+
+
+def input_pspec(mesh: Mesh, shape: ShapeConfig) -> PartitionSpec:
+    return PartitionSpec(batch_axes(mesh, shape.global_batch))
+
+
+def named(mesh: Mesh, tree_pspecs):
+    import jax
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), tree_pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# ------------------------------------------------------- trace-time context
+# Mesh context for sharding constraints INSIDE model code (MoE shard-local
+# dispatch). No-ops when unset (single-device tests, CPU execution).
+_CTX = {"mesh": None}
+
+
+class mesh_context:
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self._old = _CTX["mesh"]
+        _CTX["mesh"] = self.mesh
+        return self
+
+    def __exit__(self, *a):
+        _CTX["mesh"] = self._old
+
+
+def ctx_data_shards() -> int:
+    mesh = _CTX["mesh"]
+    return data_size(mesh) if mesh is not None else 1
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the context mesh (no-op if unset)."""
+    import jax
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for a in axes:
+        if a in ("pod", "data"):
+            a = tuple(ax for ax in (("pod", "data") if a == "data" else (a,))
+                      if ax in mesh.axis_names)
+            a = a or None
+        elif a == "model" and "model" not in mesh.axis_names:
+            a = None
+        spec.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

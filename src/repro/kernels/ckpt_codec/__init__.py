@@ -1,0 +1,2 @@
+from repro.kernels.ckpt_codec.ops import (  # noqa: F401
+    delta_encode, delta_decode)

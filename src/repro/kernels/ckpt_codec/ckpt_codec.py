@@ -1,0 +1,72 @@
+"""Pallas TPU kernel for the checkpoint dump hot path: streaming blockwise
+delta-encode + int8 quantize + dirty-block detection.
+
+The dump path is pure memory streaming (read current + previous snapshot,
+write int8 + per-block scale): arithmetic intensity ~0.25 flop/byte, i.e.
+hard HBM-bandwidth-bound. The kernel's job is to keep the streams fused in
+one pass (x, prev -> q, scale, dirty) instead of XLA's 4+ materialized
+intermediates; blocks are sized to VMEM (default 64 KiB per operand tile).
+
+Grid: 1D over blocks. Validated in interpret mode against ref.py, including
+the exact-zero (clean block) path that drives incremental dumps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, p_ref, q_ref, s_ref, d_ref):
+    x = x_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    d = x - p
+    amax = jnp.max(jnp.abs(d))
+    dirty = amax > 0.0
+    scale = jnp.where(dirty, amax / 127.0, 0.0)
+    inv = jnp.where(dirty, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q_ref[...] = jnp.clip(jnp.round(d * inv), -127, 127).astype(jnp.int8)
+    s_ref[0] = scale
+    d_ref[0] = dirty.astype(jnp.int32)
+
+
+def _decode_kernel(q_ref, s_ref, p_ref, x_ref):
+    x_ref[...] = (p_ref[...].astype(jnp.float32)
+                  + q_ref[...].astype(jnp.float32) * s_ref[0]
+                  ).astype(x_ref.dtype)
+
+
+def delta_encode_pallas(x, prev, *, interpret=False):
+    """x, prev: [nblk, blk] -> (q int8, scale f32 [nblk], dirty i32 [nblk])."""
+    nblk, blk = x.shape
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nblk, blk), jnp.int8),
+                   jax.ShapeDtypeStruct((nblk,), jnp.float32),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        interpret=interpret,
+    )(x, prev)
+    q, s, d = out
+    return q, s, d > 0
+
+
+def delta_decode_pallas(q, scale, prev, *, interpret=False):
+    nblk, blk = q.shape
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, blk), prev.dtype),
+        interpret=interpret,
+    )(q, scale, prev)

@@ -1,0 +1,50 @@
+"""jit'd wrappers: Pallas on TPU, jnp oracle elsewhere. Handles arbitrary
+flat sizes by padding to whole blocks (padding encodes as clean)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_codec import ref
+from repro.kernels.ckpt_codec.ckpt_codec import (delta_decode_pallas,
+                                                 delta_encode_pallas)
+
+BLOCK = 16384  # fp32 elements per block = 64 KiB VMEM tile per operand
+
+
+def _blocked(flat, block):
+    n = flat.shape[0]
+    nblk = max(1, -(-n // block))
+    pad = nblk * block - n
+    return jnp.pad(flat, (0, pad)).reshape(nblk, block), pad
+
+
+@functools.partial(jax.jit, static_argnames=("block", "impl", "interpret"))
+def delta_encode(x, prev, *, block=BLOCK, impl="auto", interpret=False):
+    """Flat arrays (any length) -> (q int8 [nblk,block], scale [nblk],
+    dirty [nblk]). Padding beyond len(x) is clean by construction."""
+    assert x.shape == prev.shape and x.ndim == 1
+    xb, _ = _blocked(x, block)
+    pb, _ = _blocked(prev, block)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas":
+        return delta_encode_pallas(xb, pb, interpret=interpret)
+    return ref.delta_encode_ref(xb, pb)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "impl", "interpret"))
+def delta_decode(q, scale, prev, *, n=None, impl="auto", interpret=False):
+    """Inverse of delta_encode; returns flat array of length n."""
+    block = q.shape[1]
+    pb, _ = _blocked(prev, block)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas":
+        xb = delta_decode_pallas(q, scale, pb, interpret=interpret)
+    else:
+        xb = ref.delta_decode_ref(q, scale, pb)
+    flat = xb.reshape(-1)
+    return flat[:n] if n is not None else flat

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the checkpoint delta codec.
+
+Blockwise delta-int8 with per-block scales and exact dirty flags — CRIU's
+pre-dump dirty-page tracking adapted to the TPU memory hierarchy (the unit of
+incrementality is a VMEM-sized block, not a 4 KiB kernel page).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delta_encode_ref(x, prev):
+    """x, prev: [nblk, blk] fp32/bf16.
+    Returns (q int8 [nblk, blk], scale f32 [nblk], dirty bool [nblk]).
+    Encoding: d = x - prev; scale = max|d|/127 per block; q = round(d/scale).
+    A block with d == 0 everywhere is clean (scale 0, q 0) and need not be
+    written to the image (parent-chunk reference instead)."""
+    d = (x.astype(jnp.float32) - prev.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(d), axis=1)
+    dirty = amax > 0.0
+    scale = jnp.where(dirty, amax / 127.0, 0.0)
+    inv = jnp.where(dirty, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(d * inv[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, dirty
+
+
+def delta_decode_ref(q, scale, prev):
+    """Inverse: x_hat = prev + q * scale. Max abs error <= scale/2 per block
+    (= max|d|/254)."""
+    return (prev.astype(jnp.float32)
+            + q.astype(jnp.float32) * scale[:, None]).astype(prev.dtype)

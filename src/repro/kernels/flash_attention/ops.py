@@ -1,0 +1,24 @@
+"""jit'd public wrapper: selects the Pallas TPU kernel on TPU backends and
+the distribution-aware XLA online-softmax path elsewhere (CPU dry-run /
+tests). Both compute identical math (cross-checked in tests)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.models.attention import xla_flash
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "impl", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    impl="auto", interpret=False):
+    """q [B,Sq,H,hd]; k,v [B,Skv,KV,hd] (GQA). impl: auto|pallas|xla."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, interpret=interpret)
+    return xla_flash(q, k, v, causal=causal, window=window, softcap=softcap)

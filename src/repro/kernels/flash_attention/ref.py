@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized scores,
+exact masks. O(S^2) memory — test shapes only."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q [B,Sq,H,hd]; k,v [B,Skv,KV,hd]; returns [B,Sq,H,hd].
+    Positions assume q occupies the LAST Sq slots of the Skv stream
+    (q_offset = Skv - Sq), matching decode/prefill semantics."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    q_off = Skv - Sq
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = (q_off + jnp.arange(Sq))[None, None, :, None]
+    kpos = jnp.arange(Skv)[None, None, None, :]
+    mask = jnp.ones(s.shape, bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

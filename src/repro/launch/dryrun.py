@@ -1,0 +1,437 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline inputs (FLOPs, bytes, collective traffic) from the compiled
+artifact. Proves the distribution config is coherent without real hardware.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+# The VERY FIRST lines, before ANY other import (jax locks device count on
+# first init): 512 placeholder host devices for the production meshes.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse                                                    # noqa: E402
+import json                                                        # noqa: E402
+import re                                                          # noqa: E402
+import time                                                        # noqa: E402
+import traceback                                                   # noqa: E402
+
+import jax                                                         # noqa: E402
+import jax.numpy as jnp                                            # noqa: E402
+from jax.sharding import PartitionSpec as P                        # noqa: E402
+
+from repro import configs                                          # noqa: E402
+from repro.configs.base import SHAPES, flops_per_token             # noqa: E402
+from repro.distributed import sharding as shd                      # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+from repro.launch import specs as lspecs                           # noqa: E402
+from repro.models import kvcache                                   # noqa: E402
+from repro.models.model import LM                                  # noqa: E402
+from repro.optim import OptConfig                                  # noqa: E402
+from repro.training.train_loop import (abstract_train_state,       # noqa: E402
+                                       make_train_step,
+                                       train_state_pspecs)
+
+# ----------------------------------------------------------- HLO collectives
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_ANY = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+# ring-traffic model, bytes moved per participating device per byte of operand
+_TRAFFIC = {"all-gather": lambda p: p - 1,
+            "all-reduce": lambda p: 2 * (p - 1) / p,
+            "reduce-scatter": lambda p: (p - 1) / p,
+            "all-to-all": lambda p: (p - 1) / p,
+            "collective-permute": lambda p: 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_ANY.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return n_devices
+
+
+def collective_stats(hlo: str, n_devices: int) -> dict:
+    """Post-SPMD HLO prints operand names without shapes, so operand bytes
+    are derived from the RESULT shape (printed before '=') and the replica
+    group size P: all-reduce/all-to-all/permute operand == result;
+    all-gather operand == result/P; reduce-scatter operand == result*P."""
+    stats = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result shapes: everything before the '=' (tuples for -start /
+        # multi-operand variants; -start tuples repeat (operand, result) --
+        # deduplicate identical halves)
+        eq = line.find("= ")
+        head = line[eq + 1:m.start()] if 0 <= eq < m.start() else line[:m.start()]
+        shapes = _SHAPE_RE.findall(head)
+        if "-start(" in line and len(shapes) % 2 == 0 and \
+                shapes[:len(shapes) // 2] == shapes[len(shapes) // 2:]:
+            shapes = shapes[:len(shapes) // 2]
+        rb = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        p = max(_group_size(line, n_devices), 1)
+        if op == "all-gather":
+            ob = rb // p
+        elif op == "reduce-scatter":
+            ob = rb * p
+        else:
+            ob = rb
+        s = stats.setdefault(op, {"count": 0, "operand_bytes": 0,
+                                  "modeled_traffic_bytes": 0.0})
+        s["count"] += 1
+        s["operand_bytes"] += ob
+        s["modeled_traffic_bytes"] += ob * _TRAFFIC[op](p)
+    stats["total"] = {
+        "count": sum(v["count"] for v in stats.values()),
+        "operand_bytes": sum(v["operand_bytes"] for v in stats.values()),
+        "modeled_traffic_bytes": sum(v["modeled_traffic_bytes"]
+                                     for v in stats.values()),
+    }
+    return stats
+
+
+def _memory_analysis(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+        out["repr"] = str(ma)
+    except Exception as e:  # backend may not implement it
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+# ------------------------------------------------------------------ lowering
+def lower_cell(arch: str, shape_name: str, mesh, *, fsdp=True, ep=False,
+               remat=None, moe_cf=None, donate=True, microbatches=1,
+               num_layers=None, act_seq_shard=False, cast_once=False,
+               serve_bf16=False):
+    cfg = configs.get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat_policy=remat)
+    if moe_cf:
+        cfg = cfg.replace(capacity_factor=moe_cf)
+    if num_layers:
+        cfg = cfg.replace(num_layers=num_layers)
+    shape = SHAPES[shape_name]
+    if not configs.shape_applies(cfg, shape):
+        raise ValueError(f"{arch} x {shape_name} skipped per assignment rule "
+                         f"(see DESIGN.md §4.2)")
+    if serve_bf16 and shape.kind != "train":
+        # bf16 serving weights: pure-TP when a model shard fits HBM
+        # comfortably, else keep the 2D (FSDP x TP) layout
+        model_ax = dict(zip(mesh.axis_names,
+                            mesh.devices.shape)).get("model", 1)
+        bf16_shard_gb = LM(cfg).n_params() * 2 / model_ax / 1e9
+        fsdp = bf16_shard_gb > 10.0
+    rules = shd.make_rules(cfg, mesh, fsdp=fsdp, expert_parallel=ep)
+    bax = shd.batch_axes(mesh, shape.global_batch)
+    seq_ax = "model" if (act_seq_shard and shape.seq_len %
+                         dict(zip(mesh.axis_names,
+                                  mesh.devices.shape)).get("model", 1) == 0) \
+        else None
+    act_sharding = jax.sharding.NamedSharding(mesh, P(bax, seq_ax, None))
+    lm = LM(cfg, act_sharding=act_sharding, cast_params_once=cast_once)
+    crules = shd.cache_rules(cfg, mesh, shape)
+    crules["batch"] = bax
+
+    nm = lambda tree: shd.named(mesh, tree)
+    with shd.mesh_context(mesh):
+        return _lower_kinds(cfg, lm, shape, mesh, rules, bax, crules, nm,
+                            donate, microbatches, serve_bf16)
+
+
+def _lower_kinds(cfg, lm, shape, mesh, rules, bax, crules, nm, donate,
+                 microbatches, serve_bf16):
+    if shape.kind == "train":
+        state_struct = abstract_train_state(lm)
+        state_ps = nm(train_state_pspecs(lm, rules))
+        batch_struct = lspecs.batch_specs(cfg, shape)
+        batch_ps = nm(lspecs.batch_pspecs(cfg, shape, mesh))
+        step = make_train_step(lm, OptConfig(), microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(state_ps, batch_ps),
+                         out_shardings=(state_ps, None),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_struct, batch_struct)
+    elif shape.kind == "prefill":
+        params_struct = lm.abstract(jnp.bfloat16 if serve_bf16
+                                    else jnp.float32)
+        params_ps = nm(lm.pspecs(rules))
+        batch_struct = lspecs.batch_specs(cfg, shape)
+        batch_ps = nm(lspecs.batch_pspecs(cfg, shape, mesh))
+        cache_ps = nm(kvcache.cache_pspecs(cfg, crules))
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, **batch)
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(params_ps, batch_ps),
+                         out_shardings=(nm(P(bax, None)), cache_ps))
+        lowered = jitted.lower(params_struct, batch_struct)
+    else:  # decode
+        params_struct = lm.abstract(jnp.bfloat16 if serve_bf16
+                                    else jnp.float32)
+        params_ps = nm(lm.pspecs(rules))
+        cache_struct, tok_struct = lspecs.decode_specs(cfg, shape)
+        cache_ps = nm(kvcache.cache_pspecs(cfg, crules))
+
+        def serve_step(params, cache, tokens):
+            return lm.decode_step(params, cache, tokens)
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(params_ps, cache_ps,
+                                       nm(P(bax, None))),
+                         out_shardings=(nm(P(bax, None)), cache_ps),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params_struct, cache_struct, tok_struct)
+    return cfg, lm, lowered
+
+
+# Baseline microbatch counts for train cells: chosen so the reported
+# per-device temp fits 16 GB HBM (see EXPERIMENTS.md §Dry-run). Activation
+# carries scale with layers x d_model, hence the size tiers.
+DEFAULT_TRAIN_MICROBATCHES = {
+    "deepseek-67b": 16, "mistral-large-123b": 16, "qwen2-vl-72b": 16,
+    "dbrx-132b": 16,
+    "qwen3-8b": 8, "gemma2-2b": 8, "granite-moe-3b-a800m": 8,
+    "musicgen-large": 8, "xlstm-350m": 4, "zamba2-1.2b": 4,
+}
+
+
+def default_microbatches(arch: str, shape_name: str) -> int:
+    if SHAPES[shape_name].kind != "train":
+        return 1
+    return DEFAULT_TRAIN_MICROBATCHES.get(arch, 8)
+
+
+# ------------------------------------------------- loop-aware FLOP totals
+def _slstm_correction(cfg, shape, n_devices: int) -> dict:
+    """The sLSTM time scan stays a loop even in UNROLL mode; its recurrent
+    work is added analytically (global, divided by device count)."""
+    n_slstm = (cfg.num_layers // len(cfg.pattern)) * cfg.pattern.count("slstm")
+    if n_slstm == 0 or shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    di = cfg.d_inner
+    H = cfg.num_heads
+    dh = di // H
+    B, S = shape.global_batch, shape.seq_len
+    step_flops = B * 4 * H * dh * dh * 2          # 4 gates' recurrent matmuls
+    grad_mult = 3.0 if shape.kind == "train" else 1.0
+    flops = step_flops * (S - 1) * n_slstm * grad_mult / n_devices
+    # state I/O per step (weights assumed VMEM-resident after sharding)
+    step_bytes = B * di * 4 * 6
+    return {"flops": flops,
+            "bytes": step_bytes * (S - 1) * n_slstm * grad_mult / n_devices}
+
+
+def measure_totals(arch: str, shape_name: str, mesh, **opt_kw) -> dict:
+    """True per-device totals: XLA cost_analysis counts while-loop bodies
+    once (verified), so lower two reduced-depth fully-unrolled variants
+    (L1 = pattern+tail, L2 = 2*pattern+tail) and extrapolate linearly in the
+    group count: total = f(L1) + (f(L2) - f(L1)) * (G - 1)."""
+    from repro.models import flags as mflags
+    cfg = configs.get_config(arch)
+    P = len(cfg.pattern)
+    tail = cfg.tail_layers
+    G = cfg.num_groups
+    shape = SHAPES[shape_name]
+    # unroll-blowup guard: recurrent blocks unroll seq/chunk inner bodies per
+    # layer; past ~1k bodies the 512-way SPMD compile takes hours on CPU
+    # (observed: xlstm/zamba2 prefill_32k). Those cells report body-once
+    # costs only (roofline table marks them).
+    ssm_layers = sum(1 for k in cfg.pattern if k != "attn")
+    inner_bodies = (ssm_layers * (2 * P + tail) / max(P, 1)
+                    * shape.seq_len // 128)
+    if ssm_layers and shape.kind != "decode" and inner_bodies > 1024:
+        return {"skipped": f"unroll blowup ({int(inner_bodies)} inner bodies)"}
+    meas = {}
+    for name, L in (("L1", P + tail), ("L2", 2 * P + tail)):
+        with mflags.unroll_scans():
+            _, _, lowered = lower_cell(arch, shape_name, mesh,
+                                       donate=False, microbatches=1,
+                                       num_layers=L, **opt_kw)
+            compiled = lowered.compile()
+        ca = _cost_analysis(compiled)
+        coll = collective_stats(compiled.as_text(), mesh.devices.size)
+        meas[name] = {"flops": ca.get("flops", 0.0),
+                      "bytes": ca.get("bytes accessed", 0.0),
+                      "coll_operand": coll["total"]["operand_bytes"],
+                      "coll_modeled": coll["total"]["modeled_traffic_bytes"],
+                      "coll_count": coll["total"]["count"]}
+    out = {}
+    for k in ("flops", "bytes", "coll_operand", "coll_modeled", "coll_count"):
+        f1, f2 = meas["L1"][k], meas["L2"][k]
+        out[k] = f1 + (f2 - f1) * (G - 1)
+    corr = _slstm_correction(cfg, shape, mesh.devices.size)
+    out["flops"] += corr["flops"]
+    out["bytes"] += corr["bytes"]
+    out["slstm_correction"] = corr
+    out["per_variant"] = meas
+    out["method"] = ("unrolled reduced-depth lowerings, linear extrapolation "
+                     f"L1={P + tail} L2={2 * P + tail} G={G}")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod=False, fsdp=True,
+             ep=False, remat=None, moe_cf=None, microbatches=1,
+             act_seq_shard=False, cast_once=False, serve_bf16=False,
+             out_dir=None, tag="baseline", measure=True,
+             verbose=True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    opt_kw = dict(fsdp=fsdp, ep=ep, remat=remat, moe_cf=moe_cf,
+                  act_seq_shard=act_seq_shard, cast_once=cast_once,
+                  serve_bf16=serve_bf16)
+    cfg, lm, lowered = lower_cell(arch, shape_name, mesh,
+                                  microbatches=microbatches, **opt_kw)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    hlo = compiled.as_text()
+    shape = SHAPES[shape_name]
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": {"axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+                 "n_devices": int(n_dev)},
+        "options": {"fsdp": fsdp, "expert_parallel": ep,
+                    "remat": remat or cfg.remat_policy, "moe_cf": moe_cf,
+                    "microbatches": microbatches,
+                    "act_seq_shard": act_seq_shard, "cast_once": cast_once,
+                    "serve_bf16": serve_bf16, "tag": tag},
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "cost_analysis_per_device": _cost_analysis(compiled),
+        "collectives_per_device": collective_stats(hlo, n_dev),
+        "memory_analysis_per_device": _memory_analysis(compiled),
+        "analytic": {
+            "n_params": lm.n_params(),
+            "model_flops_per_token": flops_per_token(cfg),
+            "tokens": shape.seq_len * shape.global_batch
+                      if shape.kind != "decode" else shape.global_batch,
+        },
+        "hlo_bytes": len(hlo),
+    }
+    if measure:
+        try:
+            rec["totals_per_device"] = measure_totals(
+                arch, shape_name, mesh, **opt_kw)
+        except Exception as e:
+            rec["totals_per_device"] = {"error": repr(e)}
+    if verbose:
+        ca = rec["cost_analysis_per_device"]
+        tot = rec.get("totals_per_device", {})
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi-pod' if multi_pod else 'single-pod'}: "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+              f"body_flops/dev={ca.get('flops', float('nan')):.3e} "
+              f"total_flops/dev={tot.get('flops', float('nan')):.3e} "
+              f"coll_ops={rec['collectives_per_device']['total']['count']}")
+        print(f"[dryrun] memory_analysis: "
+              f"{rec['memory_analysis_per_device'].get('repr', 'n/a')}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "pod2" if multi_pod else "pod1"
+        fn = f"{arch}__{shape_name}__{pod}__{tag}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_NAMES)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--ep", action="store_true", help="expert parallelism")
+    ap.add_argument("--remat", choices=("none", "dots", "full"))
+    ap.add_argument("--moe-cf", type=float, default=None)
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = per-arch default for train cells")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip the unrolled FLOP-measurement lowerings")
+    ap.add_argument("--act-seq-shard", action="store_true",
+                    help="sequence-parallel residual stream (SP)")
+    ap.add_argument("--cast-once", action="store_true",
+                    help="bf16 cast before layer scan (bf16 FSDP gathers)")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="bf16 serving params; pure-TP when a shard fits")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape in configs.cells():
+            print(f"{arch} {shape}")
+        return
+
+    cells = configs.cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                mb = args.microbatches or default_microbatches(arch, shape)
+                run_cell(arch, shape, multi_pod=mp, fsdp=not args.no_fsdp,
+                         ep=args.ep, remat=args.remat, moe_cf=args.moe_cf,
+                         microbatches=mb,
+                         act_seq_shard=args.act_seq_shard,
+                         cast_once=args.cast_once,
+                         serve_bf16=args.serve_bf16,
+                         measure=not args.no_measure,
+                         out_dir=args.out, tag=args.tag)
+            except Exception:
+                traceback.print_exc()
+                failures.append((arch, shape, mp))
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print("dry-run: all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

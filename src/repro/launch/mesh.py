@@ -1,0 +1,35 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (required so smoke tests see one
+device while the dry-run sees 512 placeholders)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(data=16, model=16) single pod (256 chips) or
+    (pod=2, data=16, model=16) two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            f"dry-run entrypoint must set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 before any import")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess-based multi-device tests."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,63 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. The dry-run lowers
+against these; smoke tests/examples materialize real arrays of the same
+shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import batch_axes
+from repro.models import kvcache
+from repro.models.model import LM
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Training/prefill batch structs keyed like the real batch dict."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        out = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+               "positions": _sds((3, B, S), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), jnp.int32)
+        return out
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    bax = batch_axes(mesh, shape.global_batch)
+    out = {}
+    for k in batch_specs(cfg, shape):
+        if k == "embeds":
+            out[k] = P(bax, None, None)
+        elif k == "positions":
+            out[k] = P(None, bax, None)
+        else:
+            out[k] = P(bax, None)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_struct, tokens_struct) for serve_step. Cache holds seq_len-1
+    tokens; the new token is written at index seq_len-1 -> attention spans
+    exactly seq_len entries (per the assignment's decode semantics)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = kvcache.cache_struct(cfg, B, S)
+    cache = dict(cache)
+    tokens = _sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """All inputs the lowered step consumes, per shape kind (excluding the
+    TrainState, which abstract_train_state provides)."""
+    if shape.kind == "decode":
+        cache, tokens = decode_specs(cfg, shape)
+        return {"cache": cache, "tokens": tokens}
+    return batch_specs(cfg, shape)

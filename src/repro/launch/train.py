@@ -1,0 +1,169 @@
+"""End-to-end training driver with CRIU-style lifecycle:
+
+  * deterministic restartable data pipeline,
+  * periodic (optionally async) incremental checkpoints,
+  * SIGTERM-driven preemption -> checkpoint -> exit 85 (HTCondor),
+  * --resume restores the latest image (onto a possibly different mesh),
+  * straggler monitor + restart policy wired for fleet use.
+
+CPU-friendly: use --tiny (reduced arch of the same family) or explicit
+dimension overrides. Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --tiny \
+      --steps 50 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/ck \
+      --ckpt-every 20 [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import (Checkpointer, EXIT_CHECKPOINTED, PreemptionHandler,
+                        train_meta)
+from repro.data import DataIterator, TokenDataset
+from repro.models.model import LM
+from repro.optim import OptConfig
+from repro.training.train_loop import init_train_state, make_train_step
+from repro.training.fault_tolerance import StragglerMonitor
+
+
+def build_cfg(args):
+    cfg = (configs.get_tiny(args.arch) if args.tiny
+           else configs.get_config(args.arch))
+    over = {}
+    for f, k in (("layers", "num_layers"), ("d_model", "d_model"),
+                 ("d_ff", "d_ff"), ("vocab", "vocab_size")):
+        v = getattr(args, f)
+        if v:
+            over[k] = v
+    if over:
+        cfg = cfg.replace(**over)
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--d-ff", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-dir", default="/tmp/repro_data")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-file", default="")
+    ap.add_argument("--final-ckpt", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--step-delay", type=float, default=0.0,
+                    help="artificial per-step delay (fault-injection tests)")
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args)
+    lm = LM(cfg)
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(lm, opt_cfg,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0,))
+
+    ds = TokenDataset(args.data_dir, vocab_size=cfg.vocab_size,
+                      seed=args.seed)
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    preempt = PreemptionHandler().install()
+    monitor = StragglerMonitor(num_hosts=1)
+
+    state = None
+    start_step = 0
+    if args.resume and ckpt and ckpt.registry.latest():
+        struct = jax.eval_shape(
+            lambda: init_train_state(lm, jax.random.PRNGKey(args.seed)))
+        state, man = ckpt.load_latest(target_struct=struct)
+        state = jax.tree.map(jnp.asarray, state)
+        start_step = man["meta"]["step"]
+        it = DataIterator.restore(ds, man["meta"]["data"])
+        print(f"[train] resumed from {man['image_id']} at step {start_step}")
+    else:
+        state = init_train_state(lm, jax.random.PRNGKey(args.seed))
+        it = DataIterator(ds, global_batch=args.global_batch,
+                          seq_len=args.seq_len)
+    it.start_prefetch()
+
+    def save(kind: str):
+        if not ckpt:
+            return
+        it_state = it.state()
+        meta = train_meta(arch=cfg.name, step=int(state["step"]),
+                          data_state=it_state, opt_cfg=opt_cfg)
+        if args.ckpt_async and kind == "periodic":
+            ckpt.save_async(state, step=int(state["step"]), meta=meta)
+        else:
+            ckpt.wait()
+            ckpt.save(state, step=int(state["step"]), meta=meta)
+
+    metrics_log = []
+    exit_code = 0
+    m = {"loss": float("nan")}
+    try:
+        for s in range(start_step, args.steps):
+            if preempt.preempt_requested():
+                print(f"[train] preemption requested at step {s}; "
+                      f"checkpointing and exiting {EXIT_CHECKPOINTED}")
+                it.stop_prefetch()
+                save("preempt")
+                if ckpt:
+                    ckpt.wait()
+                exit_code = EXIT_CHECKPOINTED
+                break
+            t0 = time.time()
+            batch = {"tokens": jnp.asarray(it.next_prefetched())}
+            state, m = step_fn(state, batch)
+            jax.block_until_ready(m["loss"])
+            if args.step_delay:
+                time.sleep(args.step_delay)
+            dt = time.time() - t0
+            monitor.observe([dt])
+            if (s + 1) % args.log_every == 0 or s == start_step:
+                rec = {"step": int(state["step"]),
+                       "loss": float(m["loss"]),
+                       "grad_norm": float(m["grad_norm"]),
+                       "lr": float(m["lr"]), "sec_per_step": round(dt, 4)}
+                metrics_log.append(rec)
+                print(f"[train] {json.dumps(rec)}")
+            if args.ckpt_every and (s + 1) % args.ckpt_every == 0:
+                save("periodic")
+        else:
+            if ckpt and (args.final_ckpt or args.ckpt_every) \
+                    and start_step < args.steps:
+                save("final")
+                ckpt.wait()
+    finally:
+        it.stop_prefetch()
+        preempt.uninstall()
+        if args.metrics_file:
+            with open(args.metrics_file, "w") as f:
+                json.dump(metrics_log, f, indent=1)
+    if exit_code:
+        sys.exit(exit_code)
+    print(f"[train] done at step {int(state['step'])}, "
+          f"final loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Attention: GQA projections + RoPE/M-RoPE/qk-norm, an online-softmax
+("flash in XLA") chunked implementation for train/prefill, a block-windowed
+path (static flop saving for sliding-window layers), and split-K-friendly
+decode attention over (possibly sequence-sharded) KV caches.
+
+On TPU the Pallas kernel (repro.kernels.flash_attention) is selected by
+``repro.kernels.ops``; this module is the distribution-aware XLA path used for
+dry-run lowering and CPU execution. Both implement the same math and are
+cross-checked in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as pm
+from repro.models.layers import apply_rope, rms_norm
+
+_NEG = -1e30
+_MFLOOR = -1e9  # clamp for the online-softmax running max (fully-masked rows)
+
+
+# ------------------------------------------------------------------ qkv specs
+def mha_specs(cfg: ModelConfig, heads=None, kv_heads=None):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h = heads or cfg.num_heads
+    kv = kv_heads or cfg.num_kv_heads
+    t = {
+        "wq": pm.dense((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": pm.dense((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": pm.dense((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": pm.dense((h, hd, d), ("heads", "head_dim", "embed"), fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = pm.scale_ones(hd)
+        t["k_norm"] = pm.scale_ones(hd)
+    return t
+
+
+def project_qkv(p, x, cfg: ModelConfig, positions):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,KV,hd] with rope + optional qk-norm."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def out_proj(p, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(attn_out.dtype))
+
+
+# ------------------------------------------------------- online-softmax flash
+def _chunk(n: int, c: int) -> int:
+    """Largest chunk <= c dividing n (tiny smoke shapes -> single chunk)."""
+    c = min(c, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def xla_flash(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, chunk_q: int = 512, chunk_kv: int = 1024,
+              q_offset: int = 0):
+    """Online-softmax attention, O(chunk) memory in sequence length.
+
+    q [B,Sq,H,hd]; k,v [B,Skv,KV,hd] (GQA: KV divides H, repeated here).
+    ``window`` > 0 uses the block-windowed path: per-q-chunk dynamic slice of
+    the KV stream -> flops O(S*(W+cq)) instead of O(S^2).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    scale = hd ** -0.5
+    q = q * jnp.asarray(scale, q.dtype)
+    if window and causal and window < k.shape[1]:
+        return _windowed(q, k, v, window, softcap, chunk_q, q_offset)
+    return _dense_flash(q, k, v, causal, window, softcap, chunk_q, chunk_kv,
+                        q_offset)
+
+
+def _scores(qc, kc, softcap):
+    s = jnp.einsum("bnchd,bkhd->bnchk", qc, kc,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _online_update(carry, s, vc):
+    m, l, acc = carry
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    m_safe = jnp.maximum(m_new, _MFLOOR)
+    p = jnp.exp(s - m_safe[..., None])                       # [B,n,c,H,k]
+    corr = jnp.exp(jnp.maximum(m, _MFLOOR) - m_safe)
+    l = l * corr + p.sum(axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "bnchk,bkhd->bnchd", p.astype(vc.dtype), vc,
+        preferred_element_type=jnp.float32)
+    return m_new, l, acc
+
+
+def _dense_flash(q, k, v, causal, window, softcap, chunk_q, chunk_kv, q_offset):
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    cq, ckv = _chunk(Sq, chunk_q), _chunk(Skv, chunk_kv)
+    nq, nkv = Sq // cq, Skv // ckv
+    q5 = q.reshape(B, nq, cq, H, hd)
+    ks = jnp.moveaxis(k.reshape(B, nkv, ckv, H, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nkv, ckv, H, hd), 1, 0)
+    qpos = (q_offset + jnp.arange(Sq).reshape(nq, cq))[None, :, :, None, None]
+
+    # checkpoint the chunk step: without it, scan-bwd stacks the per-chunk
+    # score tensors -> O(S^2) residual memory; with it, bwd recomputes scores
+    # chunk-by-chunk (the flash-attention bwd strategy)
+    @jax.checkpoint
+    def step(carry, xs):
+        j, kc, vc = xs
+        s = _scores(q5, kc, softcap)                          # [B,nq,cq,H,ckv]
+        kpos = (j * ckv + jnp.arange(ckv))[None, None, None, None, :]
+        mask = jnp.ones(s.shape, bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, _NEG)
+        return _online_update(carry, s, vc), None
+
+    m0 = jnp.full((B, nq, cq, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, cq, H), jnp.float32)
+    a0 = jnp.zeros((B, nq, cq, H, hd), jnp.float32)
+    from repro.models import flags
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nkv), ks, vs),
+                                  unroll=flags.scan_unroll())
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _windowed(q, k, v, window, softcap, chunk_q, q_offset):
+    """Sliding-window attention: per-q-chunk dynamic_slice of a front-padded
+    KV stream; static slice size (W + cq) -> real flop saving."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    cq = _chunk(Sq, chunk_q)
+    nq = Sq // cq
+    W = window
+    pad = [(0, 0), (W, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)                                      # [B, W+Skv, H, hd]
+    vp = jnp.pad(v, pad)
+    q5 = q.reshape(B, nq, cq, H, hd)
+
+    @jax.checkpoint
+    def one_chunk(n, qc):
+        # q rows [n*cq, n*cq+cq); allowed k in (q-W, q]; padded index base n*cq
+        start = n * cq + q_offset
+        kc = jax.lax.dynamic_slice_in_dim(kp, start, W + cq, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, start, W + cq, axis=1)
+        s = jnp.einsum("bchd,bkhd->bchk", qc, kc,
+                       preferred_element_type=jnp.float32)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = (start + jnp.arange(cq))[None, :, None, None]
+        kpos = (start - W + jnp.arange(W + cq))[None, None, None, :]
+        valid = (qpos >= kpos) & (qpos - kpos < W) & (kpos >= 0)
+        s = jnp.where(valid, s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bchk,bkhd->bchd", p.astype(vc.dtype), vc,
+                          preferred_element_type=jnp.float32)
+
+    from repro.models import flags
+    if flags.UNROLL:
+        out = jnp.stack([one_chunk(n, q5[:, n]) for n in range(nq)])
+    else:
+        out = jax.lax.map(lambda xs: one_chunk(xs[0], xs[1]),
+                          (jnp.arange(nq), jnp.moveaxis(q5, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- decode
+def decode_attention(q, k_cache, v_cache, kv_len, *, softcap: float = 0.0,
+                     window: int = 0):
+    """One-token attention over a KV cache.
+
+    q [B,1,H,hd]; caches [B,S,KV,hd] (seq dim may be sharded over `model` —
+    XLA emits the flash-decoding split-K combine collectives); kv_len: number
+    of valid cache entries (scalar). GQA handled without materializing
+    repeated KV (grouped einsum) — decode is memory-bound, the cache is read
+    exactly once.
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, KV, G, hd) * jnp.asarray(hd ** -0.5, q.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache,
+                   preferred_element_type=jnp.float32)        # [B,KV,G,S]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < kv_len
+    if window:
+        valid &= pos > kv_len - 1 - window
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,135 @@
+"""Decoder blocks: specs + apply for each kind, uniform
+(train | prefill | decode) interface.
+
+apply_block(kind, p, x, cfg, ...) -> (x, new_cache, aux)
+  - train:   cache is None, returns (x, None, aux)
+  - prefill: returns freshly built cache entry (KV written at [0, S))
+  - decode:  x is [B, 1, d]; cache entry updated at position ``pos``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as pm
+from repro.models import ssm
+from repro.models.attention import (decode_attention, mha_specs, out_proj,
+                                    project_qkv, xla_flash)
+from repro.models.layers import mlp_specs, mlp_apply, rms_norm
+from repro.models.moe import moe_specs, moe_apply, moe_dense_reference
+
+_SSM = {"mamba2": (ssm.mamba2_specs, ssm.mamba2_apply, ssm.mamba2_step,
+                   ssm.mamba2_init_state, ssm.mamba2_state_axes),
+        "mlstm": (ssm.mlstm_specs, ssm.mlstm_apply, ssm.mlstm_step,
+                  ssm.mlstm_init_state, ssm.mlstm_state_axes),
+        "slstm": (ssm.slstm_specs, ssm.slstm_apply, ssm.slstm_step,
+                  ssm.slstm_init_state, ssm.slstm_state_axes)}
+
+
+# ---------------------------------------------------------------------- specs
+def block_specs(kind: str, cfg: ModelConfig, *, shared: bool = False):
+    d = cfg.d_model
+    if kind == "attn":
+        t = {"ln1": pm.scale_ones(d), "ln2": pm.scale_ones(d),
+             "attn": mha_specs(cfg)}
+        if shared:
+            t["mlp"] = mlp_specs(cfg, cfg.shared_attn_dff, mlp_axis="shared_mlp")
+        elif cfg.num_experts:
+            t["moe"] = moe_specs(cfg)
+        else:
+            t["mlp"] = mlp_specs(cfg, cfg.d_ff)
+        if cfg.post_norm:
+            t["ln1_post"] = pm.scale_ones(d)
+            t["ln2_post"] = pm.scale_ones(d)
+        return t
+    specs_fn = _SSM[kind][0]
+    return {"ln": pm.scale_ones(d), "m": specs_fn(cfg)}
+
+
+# ---------------------------------------------------------------- attn block
+def _attn_mix(p, x, cfg: ModelConfig, positions, window, mode, cache, pos):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], h, cfg, positions)
+    new_cache = None
+    if mode == "train":
+        att = xla_flash(q, k, v, causal=True, window=window,
+                        softcap=cfg.attn_softcap,
+                        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    elif mode == "prefill":
+        att = xla_flash(q, k, v, causal=True, window=window,
+                        softcap=cfg.attn_softcap,
+                        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+        S_max = cache["k"].shape[1] if cache is not None else k.shape[1]
+        kp = jnp.zeros_like(cache["k"]) if cache is not None else k
+        vp = jnp.zeros_like(cache["v"]) if cache is not None else v
+        if cache is not None:
+            kp = jax.lax.dynamic_update_slice_in_dim(
+                kp, k.astype(kp.dtype), 0, axis=1)
+            vp = jax.lax.dynamic_update_slice_in_dim(
+                vp, v.astype(vp.dtype), 0, axis=1)
+        new_cache = {"k": kp, "v": vp}
+        del S_max
+    else:  # decode
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        att = decode_attention(q, kc, vc, pos + 1,
+                               softcap=cfg.attn_softcap, window=window)
+        new_cache = {"k": kc, "v": vc}
+    o = out_proj(p["attn"], att)
+    if cfg.post_norm:
+        o = rms_norm(o, p["ln1_post"], cfg.norm_eps)
+    return x + o, new_cache
+
+
+def apply_attn_block(p, x, cfg: ModelConfig, *, positions, window, mode,
+                     cache, pos, shared: bool = False):
+    x, new_cache = _attn_mix(p, x, cfg, positions, window, mode, cache, pos)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        if mode == "decode":
+            o = moe_dense_reference(p["moe"], h, cfg)
+        else:
+            o, aux = moe_apply(p["moe"], h, cfg)
+    else:
+        o = mlp_apply(p["mlp"], h, cfg)
+    if cfg.post_norm:
+        o = rms_norm(o, p["ln2_post"], cfg.norm_eps)
+    return x + o, new_cache, aux
+
+
+# ----------------------------------------------------------------- ssm block
+def apply_ssm_block(kind: str, p, x, cfg: ModelConfig, *, mode, cache):
+    _, apply_fn, step_fn, _, _ = _SSM[kind]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if mode == "train":
+        y = apply_fn(p["m"], h, cfg)
+        return x + y, None, aux
+    if mode == "prefill":
+        y, state = _apply_with_state(kind, p["m"], h, cfg)
+        return x + y, state, aux
+    # decode: x [B,1,d]
+    y1, state = step_fn(p["m"], h[:, 0], cache, cfg)
+    return x + y1[:, None], state, aux
+
+
+def _apply_with_state(kind, p, h, cfg):
+    """Prefill: parallel apply + final recurrent state (for continuation)."""
+    if kind == "slstm":
+        y, state = ssm.slstm_apply_with_state(p, h, cfg)
+        return y, state
+    if kind == "mamba2":
+        return ssm.mamba2_apply_with_state(p, h, cfg)
+    return ssm.mlstm_apply_with_state(p, h, cfg)
+
+
+def apply_block(kind: str, p, x, cfg: ModelConfig, *, positions, window,
+                mode, cache, pos, shared: bool = False):
+    if kind == "attn":
+        return apply_attn_block(p, x, cfg, positions=positions, window=window,
+                                mode=mode, cache=cache, pos=pos, shared=shared)
+    return apply_ssm_block(kind, p, x, cfg, mode=mode, cache=cache)

@@ -1,0 +1,29 @@
+"""Trace-time flags.
+
+UNROLL: when True, every structural loop (layer-group scan, flash kv-chunk
+scan, SSM chunk scans, CE chunk scan) is unrolled at trace time. Used by the
+dry-run's FLOP-measurement pass: XLA's cost_analysis counts a while-loop body
+ONCE regardless of trip count (verified empirically — see EXPERIMENTS.md
+§Dry-run), so roofline totals are extracted from unrolled reduced-depth
+lowerings and extrapolated linearly in depth. Never enable for real runs
+(compile-time blowup).
+
+The sLSTM time-step scan is intentionally NOT unrolled (seq_len iterations);
+its recurrent FLOPs are corrected analytically (see launch/dryrun.py).
+"""
+UNROLL = False
+
+
+class unroll_scans:
+    def __enter__(self):
+        global UNROLL
+        self._old = UNROLL
+        UNROLL = True
+
+    def __exit__(self, *a):
+        global UNROLL
+        UNROLL = self._old
+
+
+def scan_unroll() -> bool | int:
+    return True if UNROLL else 1

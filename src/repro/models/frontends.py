@@ -1,0 +1,33 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]``/``[audio]`` entries specify the transformer BACKBONE only; the
+frontend supplies precomputed patch/frame embeddings. For qwen2-vl the stub
+stands in for the ViT+merger (patch embeddings [B, S, d_model] + M-RoPE
+position streams [3, B, S]); for musicgen the EnCodec tokenizer is the stub —
+codec token ids in [0, vocab) are consumed directly by the backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_vision_embeds(cfg: ModelConfig, B: int, S: int, key,
+                            dtype=jnp.bfloat16):
+    """Stand-in for the ViT patch-merger output."""
+    k1, k2 = jax.random.split(key)
+    embeds = jax.random.normal(k1, (B, S, cfg.d_model), dtype) * 0.02
+    # M-RoPE positions: a synthetic image grid followed by text positions
+    t = jnp.arange(S, dtype=jnp.int32)
+    grid = int(max(1, S ** 0.5))
+    pos = jnp.stack([t, t // grid, t % grid])           # [3, S]
+    positions = jnp.broadcast_to(pos[:, None, :], (3, B, S))
+    labels = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    return {"embeds": embeds, "positions": positions, "labels": labels}
+
+
+def synthetic_audio_tokens(cfg: ModelConfig, B: int, S: int, key):
+    """Stand-in for the EnCodec tokenizer (delay-pattern codec stream)."""
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}

@@ -1,0 +1,106 @@
+"""Decode-time state: KV caches (attention) and recurrent states (SSM).
+
+The cache is an ordinary pytree (=> it is checkpointable by repro.core like
+any other job state — serving sessions can be dumped and migrated, the
+paper's "network applications" row). Structure:
+
+  {"stack":  {"b<j>": stacked [G, ...] per pattern entry},
+   "tail":   {"t<j>": ...},                      # zamba2 tail layers
+   "shared": stacked [n_apps, ...],              # zamba2 shared-attn caches
+   "pos":    int32 scalar (tokens already in cache)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.num_groups + (1 if cfg.tail_layers else 0)
+
+
+def _attn_entry(cfg: ModelConfig, B: int, S_max: int, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    z = jnp.zeros((B, S_max, kv, hd), dtype)
+    return {"k": z, "v": z}
+
+
+def _attn_axes():
+    ax = ("batch", "seq_kv", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+_SSM_INIT = {"mamba2": ssm.mamba2_init_state, "mlstm": ssm.mlstm_init_state,
+             "slstm": ssm.slstm_init_state}
+_SSM_AXES = {"mamba2": ssm.mamba2_state_axes, "mlstm": ssm.mlstm_state_axes,
+             "slstm": ssm.slstm_state_axes}
+
+
+def _entry(kind: str, cfg: ModelConfig, B: int, S_max: int, dtype):
+    if kind == "attn":
+        return _attn_entry(cfg, B, S_max, dtype)
+    return _SSM_INIT[kind](cfg, B, dtype)
+
+
+def _entry_axes(kind: str, cfg: ModelConfig):
+    if kind == "attn":
+        return _attn_axes()
+    return _SSM_AXES[kind](cfg)
+
+
+def _stack_tree(tree, n: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                        tree)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    out = {"pos": jnp.zeros((), jnp.int32)}
+    entry = {f"b{j}": _entry(k, cfg, B, S_max, dtype)
+             for j, k in enumerate(cfg.pattern)}
+    out["stack"] = _stack_tree(entry, cfg.num_groups)
+    if cfg.tail_layers:
+        out["tail"] = {f"t{j}": _entry(cfg.pattern[j], cfg, B, S_max, dtype)
+                       for j in range(cfg.tail_layers)}
+    if cfg.shared_attn_every:
+        out["shared"] = _stack_tree(_attn_entry(cfg, B, S_max, dtype),
+                                    n_shared_apps(cfg))
+    return out
+
+
+def cache_struct(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — no allocation (dry-run)."""
+    return jax.eval_shape(lambda: init_cache(cfg, B, S_max, dtype))
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axis tree parallel to init_cache output."""
+    out = {"pos": ()}
+    entry = {f"b{j}": _entry_axes(k, cfg) for j, k in enumerate(cfg.pattern)}
+    out["stack"] = jax.tree.map(
+        lambda ax: (None,) + tuple(ax), entry,
+        is_leaf=lambda x: isinstance(x, tuple))
+    if cfg.tail_layers:
+        out["tail"] = {f"t{j}": _entry_axes(cfg.pattern[j], cfg)
+                       for j in range(cfg.tail_layers)}
+    if cfg.shared_attn_every:
+        out["shared"] = jax.tree.map(
+            lambda ax: (None,) + tuple(ax), _attn_axes(),
+            is_leaf=lambda x: isinstance(x, tuple))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, rules: dict):
+    from jax.sharding import PartitionSpec
+
+    def one(ax):
+        return PartitionSpec(*[(rules.get(a) if a else None) for a in ax])
+    return jax.tree.map(one, cache_axes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_bytes(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16) -> int:
+    tree = cache_struct(cfg, B, S_max, dtype)
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

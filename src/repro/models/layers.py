@@ -1,0 +1,111 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embedding/head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as pm
+
+
+def rms_norm(x, scale, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm in fp32 (gemma-style optional (1+scale) parameterization)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:
+        s = 1.0 + s
+    return (xf * s).astype(dt)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# --------------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, sections: tuple = ()):
+    """x: [B, S, H, D]; positions: [B, S] or [3, B, S] for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 frequency slots are split into ``sections``
+    (t, h, w); each section rotates with its own position stream. With equal
+    position streams this reduces exactly to standard RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    if positions.ndim == 2:
+        pos = positions[None].astype(jnp.float32)     # [1, B, S]
+    else:
+        pos = positions.astype(jnp.float32)           # [3, B, S]
+    if sections:
+        assert sum(sections) == d // 2, (sections, d)
+        idx = []
+        for i, s in enumerate(sections):
+            idx.extend([min(i, pos.shape[0] - 1)] * s)
+        stream = jnp.asarray(idx)                     # [D/2] -> which pos stream
+        # angles[b, s, j] = pos[stream[j], b, s] * freqs[j]
+        angles = jnp.take(pos, stream, axis=0)        # [D/2, B, S]
+        angles = jnp.moveaxis(angles, 0, -1) * freqs  # [B, S, D/2]
+    else:
+        angles = pos[0][..., None] * freqs            # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]              # [B, S, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ MLP
+def mlp_specs(cfg: ModelConfig, d_ff: int, mlp_axis: str = "mlp"):
+    d = cfg.d_model
+    t = {"w_up": pm.dense((d, d_ff), ("embed", mlp_axis)),
+         "w_down": pm.dense((d_ff, d), (mlp_axis, "embed"), fan_in=d_ff)}
+    if cfg.glu:
+        t["w_gate"] = pm.dense((d, d_ff), ("embed", mlp_axis))
+    return t
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if cfg.glu:
+        up = _act(x @ p["w_gate"].astype(dt), cfg.activation) * up
+    else:
+        up = _act(up, cfg.activation)
+    return up @ p["w_down"].astype(dt)
+
+
+# ------------------------------------------------------------ embedding/head
+def embed_specs(cfg: ModelConfig):
+    v, d = cfg.padded_vocab, cfg.d_model
+    t = {"tok": pm.ParamSpec((v, d), ("vocab", "embed"), "normal",
+                             float(d) ** -0.5)}
+    if not cfg.tie_embeddings:
+        t["head"] = pm.dense((d, v), ("embed", "vocab"))
+    return t
+
+
+def embed_lookup(p, tokens, cfg: ModelConfig, dtype=jnp.bfloat16):
+    emb = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    if cfg.tie_embeddings:  # gemma-style scaling for tied tables
+        emb = emb * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return emb
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p["head"] if not cfg.tie_embeddings else p["tok"].T
+    logits = x @ w.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padded vocab columns
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

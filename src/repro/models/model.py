@@ -1,0 +1,286 @@
+"""The unified decoder LM covering all 10 assigned architectures.
+
+Layers are stacked per repeating pattern group and stepped with
+``jax.lax.scan`` (HLO/compile time O(1) in depth); zamba2's weight-shared
+attention block is applied at group boundaries from the scan closure. Modes:
+
+  train   — full forward, chunked-CE loss (never materializes [B,S,V])
+  prefill — forward + cache/state construction (serving, dry-run prefill_32k)
+  decode  — one token against the cache     (serving, dry-run decode cells)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import kvcache
+from repro.models import params as pm
+from repro.models.blocks import apply_block, block_specs
+from repro.models.layers import embed_lookup, embed_specs, rms_norm, unembed
+
+_POLICIES = {
+    "none": None,
+    "dots": "dots_with_no_batch_dims_saveable",
+    "full": "nothing_saveable",
+}
+
+
+def _remat(fn, policy_name: str):
+    if policy_name == "none":
+        return fn
+    policy = getattr(jax.checkpoint_policies, _POLICIES[policy_name])
+    return jax.checkpoint(fn, policy=policy)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, act_sharding=None,
+                 cast_params_once: bool = False):
+        """act_sharding: optional NamedSharding for [B, S, d] activations
+        (batch over (pod, data)). REQUIRED under FSDP meshes: without the
+        constraint GSPMD propagates the weights' d_model->data sharding into
+        the residual stream and replicates the batch on every device (~16x
+        flops + memory; found the hard way, see EXPERIMENTS.md §Dry-run).
+        With sequence parallelism the spec is P(batch, "model", None) —
+        constraint applied at group boundaries only, so scan carries (the
+        dominant activation memory) shard over `model` too.
+
+        cast_params_once: cast fp32 masters to compute dtype before the layer
+        scan so FSDP all-gathers move bf16 (§Perf "bf16-gather")."""
+        cfg.validate()
+        self.cfg = cfg
+        self.act_sharding = act_sharding
+        self.cast_params_once = cast_params_once
+
+    def _cs(self, x):
+        if self.act_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    # ------------------------------------------------------------------ specs
+    def specs(self):
+        cfg = self.cfg
+        entry = {f"b{j}": block_specs(kind, cfg)
+                 for j, kind in enumerate(cfg.pattern)}
+        tree = {
+            "embed": embed_specs(cfg),
+            "stack": pm.stack_specs(entry, cfg.num_groups),
+            "final_norm": pm.scale_ones(cfg.d_model),
+        }
+        if cfg.tail_layers:
+            tree["tail"] = {f"t{j}": block_specs(cfg.pattern[j], cfg)
+                            for j in range(cfg.tail_layers)}
+        if cfg.shared_attn_every:
+            tree["shared"] = block_specs("attn", cfg, shared=True)
+        return tree
+
+    def abstract(self, dtype=jnp.float32):
+        return pm.abstract(self.specs(), dtype)
+
+    def init(self, key, dtype=jnp.float32):
+        return pm.init(self.specs(), key, dtype)
+
+    def pspecs(self, rules: dict):
+        return pm.pspecs(self.specs(), rules)
+
+    def n_params(self) -> int:
+        return pm.count(self.specs())
+
+    # ---------------------------------------------------------------- forward
+    def _run_stack(self, params, x, positions, mode, cache, pos):
+        cfg = self.cfg
+        has_state = mode in ("prefill", "decode")
+        if self.cast_params_once:
+            # cast fp32 master weights to the compute dtype BEFORE the layer
+            # scan, and pin the cast with an optimization barrier so GSPMD
+            # cannot hoist the FSDP all-gather above the convert — gathers
+            # then move bf16, not fp32 (EXPERIMENTS.md §Perf "bf16-gather")
+            dt = x.dtype
+            cast = lambda a: a.astype(dt) if a.dtype == jnp.float32 else a
+            params = dict(params)
+            for k in ("stack", "tail", "shared"):
+                if k in params:
+                    params[k] = jax.lax.optimization_barrier(
+                        jax.tree.map(cast, params[k]))
+        shared_p = params.get("shared")
+
+        def group_body(carry, xs):
+            x, aux = carry
+            x = self._cs(x)
+            gp, gcache, scache = xs
+            new_shared = None
+            if shared_p is not None:
+                x, new_shared, a = apply_block(
+                    "attn", shared_p, x, cfg, positions=positions, window=0,
+                    mode=mode, cache=scache, pos=pos, shared=True)
+                aux = aux + a
+            new_cache = {}
+            for j, (kind, win) in enumerate(zip(cfg.pattern, cfg.windows)):
+                c_in = None if gcache is None else gcache[f"b{j}"]
+                x, c_new, a = apply_block(
+                    kind, gp[f"b{j}"], x, cfg, positions=positions,
+                    window=win, mode=mode, cache=c_in, pos=pos)
+                aux = aux + a
+                if has_state:
+                    new_cache[f"b{j}"] = c_new
+            ys = (new_cache, new_shared) if has_state else None
+            return (x, aux), ys
+
+        body = _remat(group_body, cfg.remat_policy if mode == "train" else "none")
+        aux0 = jnp.zeros((), jnp.float32)
+        shared_caches = None
+        if has_state and shared_p is not None:
+            shared_caches = jax.tree.map(lambda a: a[:cfg.num_groups],
+                                         cache["shared"])
+        xs = (params["stack"],
+              cache["stack"] if has_state else None,
+              shared_caches)
+        from repro.models import flags
+        if flags.UNROLL:  # dry-run FLOP measurement (see models/flags.py)
+            carry = (x, aux0)
+            ys_list = []
+            for g in range(cfg.num_groups):
+                xs_g = jax.tree.map(lambda a: a[g], xs)
+                carry, ys_g = body(carry, xs_g)
+                ys_list.append(ys_g)
+            x, aux = carry
+            ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+                  if has_state else None)
+        elif xs[1] is None and xs[2] is None:
+            # scan needs every xs leaf to carry the leading G dim; drop the
+            # empty cache subtrees
+            (x, aux), _ = jax.lax.scan(
+                lambda c, gp: body(c, (gp, None, None)), (x, aux0),
+                params["stack"])
+            ys = None
+        else:
+            (x, aux), ys = jax.lax.scan(body, (x, aux0), xs)
+
+        new_cache = None
+        if has_state:
+            stack_new, shared_new = ys
+            new_cache = {"stack": stack_new}
+            if shared_p is not None:
+                new_cache["shared"] = shared_new
+
+        # ---- tail layers (zamba2: 38 = 6*6 + 2) + final shared application
+        if cfg.tail_layers:
+            tail_new = {}
+            scache = None
+            if shared_p is not None:
+                if has_state:
+                    scache = jax.tree.map(lambda a: a[-1], cache["shared"])
+                x, s_new, a = apply_block(
+                    "attn", shared_p, x, cfg, positions=positions, window=0,
+                    mode=mode, cache=scache, pos=pos, shared=True)
+                aux = aux + a
+                if has_state:
+                    new_cache["shared"] = jax.tree.map(
+                        lambda stack, last: jnp.concatenate(
+                            [stack, last[None]], axis=0),
+                        new_cache["shared"], s_new)
+            for j in range(cfg.tail_layers):
+                kind, win = cfg.pattern[j], cfg.windows[j]
+                c_in = None if not has_state else cache["tail"][f"t{j}"]
+                x, c_new, a = apply_block(
+                    kind, params["tail"][f"t{j}"], x, cfg,
+                    positions=positions, window=win, mode=mode,
+                    cache=c_in, pos=pos)
+                aux = aux + a
+                if has_state:
+                    tail_new[f"t{j}"] = c_new
+            if has_state:
+                new_cache["tail"] = tail_new
+        return x, new_cache, aux
+
+    def forward(self, params, *, tokens=None, embeds=None, positions=None,
+                mode="train", cache=None, compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(compute_dtype)
+        else:
+            x = embed_lookup(params["embed"], tokens, cfg, compute_dtype)
+        x = self._cs(x)
+        B, S = x.shape[:2]
+        pos = cache["pos"] if cache is not None else 0
+        if positions is None:
+            base = jnp.arange(S, dtype=jnp.int32)[None] + pos
+            positions = jnp.broadcast_to(base, (B, S))
+        x, new_cache, aux = self._run_stack(params, x, positions, mode,
+                                            cache, pos)
+        # checkpointed: the final norm sits outside the remat'd stack and
+        # would save fp32 [B,S,d] intermediates for bwd
+        x = jax.checkpoint(
+            lambda h, s: rms_norm(h, s, cfg.norm_eps))(self._cs(x),
+                                                       params["final_norm"])
+        if new_cache is not None:
+            new_cache["pos"] = pos + (1 if mode == "decode" else S)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------- loss
+    def loss(self, params, batch, ce_chunk: int = 512):
+        """batch: {"tokens": [B,S]} or {"embeds": [B,S,d], "labels": [B,S]}
+        (+ optional "positions"). Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        labels = batch.get("labels", tokens)
+        x, _, aux = self.forward(
+            params, tokens=tokens if embeds is None else None, embeds=embeds,
+            positions=batch.get("positions"), mode="train")
+        ce = self._chunked_ce(params, x[:, :-1], labels[:, 1:], ce_chunk)
+        n_moe = cfg.num_layers if cfg.num_experts else 1
+        aux_mean = aux / n_moe
+        loss = ce + (cfg.router_aux_coef * aux_mean if cfg.num_experts else 0.0)
+        return loss, {"ce": ce, "aux": aux_mean, "loss": loss}
+
+    def _chunked_ce(self, params, x, labels, chunk: int):
+        """Streaming CE over seq chunks — never materializes [B, S, V]."""
+        cfg = self.cfg
+        B, T, d = x.shape
+        c = min(chunk, T)
+        while T % c:
+            c -= 1
+        nc = T // c
+        xs = (jnp.moveaxis(x.reshape(B, nc, c, d), 1, 0),
+              jnp.moveaxis(labels.reshape(B, nc, c), 1, 0))
+
+        # checkpointed: CE-scan bwd would otherwise save per-chunk logits
+        # ([B,c,V] stacked over chunks) — recompute them instead
+        @jax.checkpoint
+        def step(acc, xs_c):
+            xc, lc = xs_c
+            logits = unembed(params["embed"], xc, cfg)       # fp32 [B,c,V]
+            lz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return acc + (lz - gold).sum(), None
+
+        from repro.models import flags
+        tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), xs,
+                              unroll=flags.scan_unroll())
+        return tot / (B * T)
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params, *, tokens=None, embeds=None, positions=None,
+                S_max=None, compute_dtype=jnp.bfloat16):
+        """Returns (last-position logits [B,V], cache)."""
+        cfg = self.cfg
+        S = (tokens if embeds is None else embeds).shape[1]
+        B = (tokens if embeds is None else embeds).shape[0]
+        cache = kvcache.init_cache(cfg, B, S_max or S, dtype=compute_dtype)
+        x, new_cache, _ = self.forward(
+            params, tokens=tokens, embeds=embeds, positions=positions,
+            mode="prefill", cache=cache, compute_dtype=compute_dtype)
+        logits = unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens,
+                    compute_dtype=jnp.bfloat16):
+        """tokens [B,1] -> (logits [B,V], cache)."""
+        x, new_cache, _ = self.forward(params, tokens=tokens, mode="decode",
+                                       cache=cache,
+                                       compute_dtype=compute_dtype)
+        logits = unembed(params["embed"], x[:, -1:], self.cfg)[:, 0]
+        return logits, new_cache

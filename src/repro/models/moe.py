@@ -1,0 +1,140 @@
+"""Token-choice top-k MoE with sort-based scatter dispatch (TPU-friendly,
+memory-light: no [T, E, C] one-hot dispatch tensors).
+
+Dispatch: top-k routing -> position-in-expert via stable argsort ->
+scatter into [E, C, d] slots (capacity C = ceil(k*T/E * cf), overflow
+dropped, 'drop' scatter mode) -> per-expert GEMMs (einsum; `mlp` dim
+TP-sharded, optional expert-parallel when E % model == 0) -> gather-combine
+with normalized router weights. Load-balance aux loss per Switch/GShard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as pm
+from repro.models.layers import _act
+
+
+def moe_specs(cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    t = {
+        "router": pm.dense((d, e), ("embed", None)),
+        "w_up": pm.dense((e, d, ff), ("expert", "embed", "mlp"), fan_in=d),
+        "w_down": pm.dense((e, ff, d), ("expert", "mlp", "embed"), fan_in=ff),
+    }
+    if cfg.glu:
+        t["w_gate"] = pm.dense((e, d, ff), ("expert", "embed", "mlp"), fan_in=d)
+    return t
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+            // cfg.num_experts)
+    return max(8, c)
+
+
+def _dispatch_group(p, xt, cfg: ModelConfig, C: int):
+    """Shard-local routing for one token group. xt [T, d] ->
+    (disp [E*C, d], slot [T*K], weight [T*K], counts [E], mean_prob [E])."""
+    T, d = xt.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                              # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)     # renorm
+
+    # position-in-expert via stable sort (memory O(T*K), not O(T*E*C))
+    flat_e = idx.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1, mode="drop")
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(T * K, dtype=jnp.int32) - starts[flat_e[order]]
+    pos = jnp.zeros((T * K,), jnp.int32).at[order].set(pos_sorted)
+
+    slot = flat_e * C + pos                                          # [T*K]
+    keep = pos < C
+    slot = jnp.where(keep, slot, E * C)                              # OOB -> drop
+    tok = jnp.repeat(jnp.arange(T), K)
+    disp = jnp.zeros((E * C, d), xt.dtype).at[slot].add(
+        xt[tok], mode="drop")
+    w = (gate.reshape(T * K) * keep).astype(xt.dtype)
+    return disp, slot, w, counts, probs.mean(axis=0)
+
+
+def _combine_group(out, slot, w, T: int, K: int):
+    gathered = out.at[slot].get(mode="fill", fill_value=0)           # [T*K, d]
+    return (gathered * w[:, None]).reshape(T, K, -1).sum(axis=1)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x [B,S,d] -> (y [B,S,d], aux_loss scalar).
+
+    Dispatch is SHARD-LOCAL: tokens are grouped by data shard (leading group
+    dim pinned to the `data` mesh axes) and routed within the group —
+    routing/sort/scatter generate zero cross-device traffic. The expert GEMMs
+    run OUTSIDE the vmap with every big intermediate explicitly constrained
+    (group -> data, d_ff -> model), so GSPMD gathers the (small) FSDP weight
+    shards instead of all-reducing the (huge) [G,E,C,ff] partial sums — the
+    latter cost ~20 GB/layer/device on dbrx (EXPERIMENTS.md §Perf
+    "moe-local-dispatch")."""
+    from repro.distributed.sharding import constrain, ctx_data_shards
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G = ctx_data_shards()
+    if B % G:
+        G = 1
+    Tg = T // G
+    C = capacity(cfg, Tg)
+    xg = constrain(x.reshape(G, Tg, d), "data", None, None)
+
+    disp, slot, w, counts, mean_prob = jax.vmap(
+        lambda xt: _dispatch_group(p, xt, cfg, C))(xg)
+    h = constrain(disp.reshape(G, E, C, d), "data", None, None, None)
+
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_up"].astype(x.dtype))
+    up = constrain(up, "data", None, None, "model")
+    if cfg.glu:
+        gt = jnp.einsum("gecd,edf->gecf", h, p["w_gate"].astype(x.dtype))
+        up = _act(constrain(gt, "data", None, None, "model"),
+                  cfg.activation) * up
+    else:
+        up = _act(up, cfg.activation)
+    out = jnp.einsum("gecf,efd->gecd", up, p["w_down"].astype(x.dtype))
+    out = constrain(out, "data", None, None, None).reshape(G, E * C, d)
+
+    y = jax.vmap(lambda o, s, ww: _combine_group(o, s, ww, Tg, K))(
+        out, slot, w)
+    y = constrain(y, "data", None, None).reshape(B, S, d)
+
+    # Switch/GShard load-balance loss over the GLOBAL batch
+    counts = counts.sum(axis=0).astype(jnp.float32)
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    aux = E * jnp.sum(frac * mean_prob.mean(axis=0))
+    return y, aux
+
+
+def moe_dense_reference(p, x, cfg: ModelConfig):
+    """O(T*E) oracle: every expert on every token, combined by (renormalized)
+    top-k gates. Used by tests to validate the scatter dispatch (no-drop
+    regime) and by the EP-ablation benchmark."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    dense_gate = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], idx].set(gate)             # [T, E]
+    up = jnp.einsum("td,edf->tef", xt, p["w_up"].astype(x.dtype))
+    if cfg.glu:
+        up = _act(jnp.einsum("td,edf->tef", xt, p["w_gate"].astype(x.dtype)),
+                  cfg.activation) * up
+    else:
+        up = _act(up, cfg.activation)
+    y = jnp.einsum("tef,efd->ted", up, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("ted,te->td", y, dense_gate.astype(x.dtype))
+    return y.reshape(B, S, d)

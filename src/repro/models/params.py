@@ -1,0 +1,103 @@
+"""Parameter-spec system: declarative shapes + logical sharding axes.
+
+A model is described as a nested dict of ``ParamSpec`` leaves. From that single
+source of truth we derive (a) abstract params for dry-run lowering (no
+allocation), (b) initialized params, (c) ``PartitionSpec`` trees via the
+logical-axis rules in ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis name (or None) per dim
+    init: str = "normal"   # normal | zeros | ones
+    stddev: float = 0.02
+
+
+def dense(shape, axes, fan_in=None) -> ParamSpec:
+    """Dense weight with 1/sqrt(fan_in) init."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return ParamSpec(tuple(shape), tuple(axes), "normal", float(fan_in) ** -0.5)
+
+
+def scale_ones(dim) -> ParamSpec:
+    return ParamSpec((dim,), (None,), "ones")
+
+
+def zeros(shape, axes=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes or (None,) * len(shape)), "zeros")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree, n: int):
+    """Add a leading stacked-layer dim (never sharded) to every leaf."""
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, (None,) + p.axes, p.init, p.stddev),
+        tree, is_leaf=is_spec)
+
+
+def abstract(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), tree,
+                        is_leaf=is_spec)
+
+
+def pspecs(tree, rules: dict):
+    """Map logical axes -> mesh axes. ``rules[axis]`` is a mesh-axis name,
+    tuple of names, or None."""
+    def one(p: ParamSpec) -> PartitionSpec:
+        entries = []
+        for ax in p.axes:
+            r = rules.get(ax) if ax is not None else None
+            entries.append(r if r else None)
+        return PartitionSpec(*entries)
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def init(tree, key, dtype=jnp.float32):
+    """Deterministic init: rng folded per parameter path (stable across
+    restructuring -> checkpoints are reproducible bit-for-bit)."""
+    def one(path, p: ParamSpec):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        h = int.from_bytes(
+            hashlib.sha256(_path_str(path).encode()).digest()[:4], "little")
+        k = jax.random.fold_in(key, h)
+        return (jax.random.normal(k, p.shape, dtype) * p.stddev).astype(dtype)
+    return jax.tree_util.tree_map_with_path(one, tree, is_leaf=is_spec)
+
+
+def count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    total = 0
+    for p in leaves:
+        n = 1
+        for s in (p.shape if is_spec(p) else p.shape):
+            n *= s
+        total += n
+    return total
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def leaf_paths(tree) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+    return [_path_str(p) for p, _ in flat]

@@ -1,0 +1,506 @@
+"""Recurrent blocks: Mamba2 (SSD, chunked-parallel) and xLSTM (mLSTM matrix
+memory, chunked; sLSTM scalar memory, sequential scan).
+
+Each block kind provides: ``*_specs`` (params), ``*_apply`` (training-time
+parallel form), ``*_step`` (single-token decode recurrence), ``*_init_state``
+and a sequential ``*_ref`` oracle. Chunked and sequential forms are
+cross-validated in tests/test_ssm.py; decode state is O(1) in context length,
+which is what makes these archs eligible for the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as pm
+
+_F_BIAS = 4.0  # xLSTM forget-gate bias offset (paper inits in [3, 6])
+
+
+def _chunks(S: int, Q: int) -> int:
+    Q = min(Q, S)
+    while S % Q:
+        Q -= 1
+    return Q
+
+
+# ---------------------------------------------------------------- causal conv
+def causal_conv(x, w, b):
+    """Depthwise causal conv along seq. x [B,S,C], w [K,C], b [C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b
+
+
+def conv_step(tail, x1, w, b):
+    """Single-step causal conv. tail [B,K-1,C] (past inputs), x1 [B,C]."""
+    K = w.shape[0]
+    window = jnp.concatenate([tail, x1[:, None, :]], axis=1)   # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:, :]
+
+
+# ======================================================================= SSD
+def mamba2_specs(cfg: ModelConfig):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, K = cfg.mamba_heads, cfg.ssm_conv
+    return {
+        "w_z": pm.dense((d, di), ("embed", "inner")),
+        "w_x": pm.dense((d, di), ("embed", "inner")),
+        "w_B": pm.dense((d, N), ("embed", "state")),
+        "w_C": pm.dense((d, N), ("embed", "state")),
+        "w_dt": pm.dense((d, H), ("embed", None)),
+        "conv_x": pm.ParamSpec((K, di), ("conv", "inner"), "normal", K ** -0.5),
+        "conv_B": pm.ParamSpec((K, N), ("conv", "state"), "normal", K ** -0.5),
+        "conv_C": pm.ParamSpec((K, N), ("conv", "state"), "normal", K ** -0.5),
+        "b_conv_x": pm.zeros((di,), ("inner",)),
+        "b_conv_B": pm.zeros((N,)),
+        "b_conv_C": pm.zeros((N,)),
+        "A_log": pm.zeros((H,)),          # A = -exp(A_log) = -1 at init
+        "D": pm.scale_ones(H),
+        "dt_bias": pm.zeros((H,)),
+        "gate_norm": pm.scale_ones(di),
+        "w_out": pm.dense((di, d), ("inner", "embed")),
+    }
+
+
+def _mamba2_inputs(p, x, cfg: ModelConfig):
+    dt_ = x.dtype
+    z = x @ p["w_z"].astype(dt_)
+    xi = x @ p["w_x"].astype(dt_)
+    Bi = x @ p["w_B"].astype(dt_)
+    Ci = x @ p["w_C"].astype(dt_)
+    dt_raw = (x @ p["w_dt"].astype(dt_)).astype(jnp.float32)
+    return z, xi, Bi, Ci, dt_raw
+
+
+def _gate_out(p, y, z, cfg: ModelConfig):
+    from repro.models.layers import rms_norm
+    g = y * jax.nn.silu(z)
+    g = rms_norm(g, p["gate_norm"], cfg.norm_eps)
+    return g @ p["w_out"].astype(g.dtype)
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, chunk: int = 128,
+                 return_state: bool = False):
+    """Chunked SSD. x [B,S,d] -> y [B,S,d] (optionally + final recurrent
+    state, matching mamba2_init_state, for prefill->decode continuation)."""
+    B, S, d = x.shape
+    H, N = cfg.mamba_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    K = cfg.ssm_conv
+    z, xi, Bi, Ci, dt_raw = _mamba2_inputs(p, x, cfg)
+    tails = {"conv_x": _tail(xi, K), "conv_B": _tail(Bi, K),
+             "conv_C": _tail(Ci, K)} if return_state else None
+    xi = jax.nn.silu(causal_conv(xi, p["conv_x"].astype(x.dtype),
+                                 p["b_conv_x"].astype(x.dtype)))
+    Bi = jax.nn.silu(causal_conv(Bi, p["conv_B"].astype(x.dtype),
+                                 p["b_conv_B"].astype(x.dtype)))
+    Ci = jax.nn.silu(causal_conv(Ci, p["conv_C"].astype(x.dtype),
+                                 p["b_conv_C"].astype(x.dtype)))
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])               # [B,S,H] fp32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [H]
+
+    Q = _chunks(S, chunk)
+    nc = S // Q
+    xh = xi.reshape(B, nc, Q, H, P)
+    Bc = Bi.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Ci.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+
+    a = A * dtc                                               # [B,nc,Q,H] (<0)
+    A_cs = jnp.cumsum(a, axis=2)                              # inclusive
+    A_tot = A_cs[:, :, -1, :]                                 # [B,nc,H]
+
+    # ---- intra-chunk (quadratic within chunk)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,nc,Q,Q]
+    seg = A_cs[:, :, :, None, :] - A_cs[:, :, None, :, :]     # [B,nc,i,j,H]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    L = CB[:, :, :, :, None] * decay * dtc[:, :, None, :, :]  # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", L.astype(x.dtype), xh)
+
+    # ---- inter-chunk (state carried across chunks)
+    w_end = jnp.exp(A_tot[:, :, None, :] - A_cs) * dtc        # [B,nc,Q,H]
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                     w_end, Bc, xh.astype(jnp.float32))       # [B,nc,H,P,N]
+
+    def carry_step(h, inputs):
+        s_c, a_tot = inputs                                   # [B,H,P,N], [B,H]
+        h_out = h
+        h = h * jnp.exp(a_tot)[:, :, None, None] + s_c
+        return h, h_out
+
+    from repro.models import flags
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        carry_step, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(A_tot, 1, 0)),
+        unroll=flags.scan_unroll())
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                       # [B,nc,H,P,N]
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, h_prev) * \
+        jnp.exp(A_cs)[..., None]
+    y = (y_intra.astype(jnp.float32) + y_inter
+         + p["D"][None, None, None, :, None] * xh.astype(jnp.float32))
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    out = _gate_out(p, y, z, cfg)
+    if return_state:
+        return out, {"h": h_final, **tails}
+    return out
+
+
+def _tail(x, K: int):
+    """Last K-1 positions (front-padded for short sequences)."""
+    B, S, C = x.shape
+    if S >= K - 1:
+        return x[:, S - (K - 1):, :]
+    return jnp.pad(x, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+
+def mamba2_apply_with_state(p, x, cfg: ModelConfig, chunk: int = 128):
+    return mamba2_apply(p, x, cfg, chunk, return_state=True)
+
+
+def mamba2_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    H, N = cfg.mamba_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    K = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((B, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((B, K - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((B, K - 1, N), dtype),
+        "conv_C": jnp.zeros((B, K - 1, N), dtype),
+    }
+
+
+def mamba2_state_axes(cfg: ModelConfig):
+    return {
+        "h": ("batch", None, None, "state"),
+        "conv_x": ("batch", None, "inner"),
+        "conv_B": ("batch", None, "state"),
+        "conv_C": ("batch", None, "state"),
+    }
+
+
+def mamba2_step(p, x1, state, cfg: ModelConfig):
+    """x1 [B,d] -> (y1 [B,d], state)."""
+    B = x1.shape[0]
+    H, N = cfg.mamba_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    x = x1[:, None, :]
+    z, xi, Bi, Ci, dt_raw = _mamba2_inputs(p, x, cfg)
+    xi1, conv_x = conv_step(state["conv_x"], xi[:, 0], p["conv_x"].astype(x.dtype),
+                            p["b_conv_x"].astype(x.dtype))
+    Bi1, conv_B = conv_step(state["conv_B"], Bi[:, 0], p["conv_B"].astype(x.dtype),
+                            p["b_conv_B"].astype(x.dtype))
+    Ci1, conv_C = conv_step(state["conv_C"], Ci[:, 0], p["conv_C"].astype(x.dtype),
+                            p["b_conv_C"].astype(x.dtype))
+    xi1 = jax.nn.silu(xi1).reshape(B, H, P).astype(jnp.float32)
+    Bi1 = jax.nn.silu(Bi1).astype(jnp.float32)
+    Ci1 = jax.nn.silu(Ci1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])         # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["h"] * jnp.exp(A * dt)[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xi1 * dt[..., None], Bi1)
+    y = jnp.einsum("bhpn,bn->bhp", h, Ci1) + p["D"][None, :, None] * xi1
+    y = y.reshape(B, 1, cfg.d_inner).astype(x1.dtype)
+    out = _gate_out(p, y, z, cfg)[:, 0]
+    return out, {"h": h, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+
+
+def mamba2_ref(p, x, cfg: ModelConfig):
+    """Sequential oracle (token-by-token recurrence)."""
+    B, S, d = x.shape
+
+    def step(state, x1):
+        y, state = mamba2_step(p, x1, state, cfg)
+        return state, y
+
+    _, ys = jax.lax.scan(step, mamba2_init_state(cfg, B, x.dtype),
+                         jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ===================================================================== mLSTM
+def mlstm_specs(cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    H, K = cfg.num_heads, cfg.ssm_conv
+    return {
+        "w_xin": pm.dense((d, di), ("embed", "inner")),
+        "w_z": pm.dense((d, di), ("embed", "inner")),
+        "conv_x": pm.ParamSpec((K, di), ("conv", "inner"), "normal", K ** -0.5),
+        "b_conv_x": pm.zeros((di,), ("inner",)),
+        "w_q": pm.dense((di, di), (None, "inner")),
+        "w_k": pm.dense((di, di), (None, "inner")),
+        "w_v": pm.dense((di, di), (None, "inner")),
+        "w_i": pm.dense((di, H), (None, None)),
+        "w_f": pm.dense((di, H), (None, None)),
+        "b_i": pm.zeros((H,)),
+        "b_f": pm.zeros((H,)),
+        "mh_norm": pm.scale_ones(di),
+        "w_down": pm.dense((di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_qkvgates(p, x, cfg: ModelConfig):
+    dt_ = x.dtype
+    di, H = cfg.d_inner, cfg.num_heads
+    dh = di // H
+    xin = x @ p["w_xin"].astype(dt_)
+    z = x @ p["w_z"].astype(dt_)
+    xc = jax.nn.silu(causal_conv(xin, p["conv_x"].astype(dt_),
+                                 p["b_conv_x"].astype(dt_)))
+    B, S = x.shape[0], x.shape[1]
+    q = (xc @ p["w_q"].astype(dt_)).reshape(B, S, H, dh)
+    k = (xc @ p["w_k"].astype(dt_)).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = (xin @ p["w_v"].astype(dt_)).reshape(B, S, H, dh)
+    logi = (xc @ p["w_i"].astype(dt_)).astype(jnp.float32) + p["b_i"]
+    logf = jax.nn.log_sigmoid(
+        (xc @ p["w_f"].astype(dt_)).astype(jnp.float32) + p["b_f"] + _F_BIAS)
+    return q, k, v, logi, logf, z
+
+
+def _mlstm_out(p, h, z, cfg: ModelConfig):
+    from repro.models.layers import rms_norm
+    B, S = h.shape[0], h.shape[1]
+    h = h.reshape(B, S, cfg.d_inner)
+    h = rms_norm(h, p["mh_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ p["w_down"].astype(h.dtype)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, chunk: int = 128,
+                return_state: bool = False):
+    """Chunked-parallel mLSTM. x [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    if return_state:  # capture raw (pre-conv) inputs for the conv tail
+        xin_raw = x @ p["w_xin"].astype(x.dtype)
+    q, k, v, logi, logf, z = _mlstm_qkvgates(p, x, cfg)
+    Q = _chunks(S, chunk)
+    nc = S // Q
+    qc = q.reshape(B, nc, Q, H, dh)
+    kc = k.reshape(B, nc, Q, H, dh)
+    vc = v.reshape(B, nc, Q, H, dh)
+    li = logi.reshape(B, nc, Q, H)
+    lf = logf.reshape(B, nc, Q, H)
+    F_cs = jnp.cumsum(lf, axis=2)                              # inclusive
+    F_tot = F_cs[:, :, -1, :]
+
+    # decay from step j (incl. its input gate) to row i, within chunk
+    seg = F_cs[:, :, :, None, :] - F_cs[:, :, None, :, :] + \
+        li[:, :, None, :, :]                                   # [B,nc,i,j,H]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    seg = jnp.where(tril, seg, -jnp.inf)
+    # to-chunk-end decays (for state update)
+    dend = F_tot[:, :, None, :] - F_cs + li                    # [B,nc,j,H]
+
+    def step(carry, xs):
+        C, n, m = carry                                        # scaled states
+        qx, kx, vx, segx, dendx, fcs, ftot = xs
+        m_intra = segx.max(axis=2)                             # [B,i,H]
+        m_row = jnp.maximum(fcs + m[:, None, :], m_intra)      # [B,i,H]
+        w_intra = jnp.exp(segx - m_row[:, :, None, :])         # [B,i,j,H]
+        w_inter = jnp.exp(fcs + m[:, None, :] - m_row)         # [B,i,H]
+        qkt = jnp.einsum("bihd,bjhd->bijh", qx, kx,
+                         preferred_element_type=jnp.float32)
+        wq = qkt * w_intra
+        num = jnp.einsum("bijh,bjhd->bihd", wq.astype(vx.dtype), vx,
+                         preferred_element_type=jnp.float32)
+        num = num + w_inter[..., None] * jnp.einsum(
+            "bihd,bhde->bihe", qx.astype(jnp.float32), C)
+        den = wq.sum(axis=2) + w_inter * jnp.einsum(
+            "bihd,bhd->bih", qx.astype(jnp.float32), n)
+        h = num / jnp.maximum(
+            jnp.abs(den), jnp.exp(-m_row))[..., None]          # [B,i,H,dh]
+        # ---- state update to chunk end
+        m_end = jnp.maximum(ftot + m, dendx.max(axis=1))       # [B,H]
+        w_c = jnp.exp(dendx - m_end[:, None, :])               # [B,j,H]
+        scale = jnp.exp(ftot + m - m_end)                      # [B,H]
+        kw = (kx.astype(jnp.float32) * w_c[..., None])
+        C = scale[..., None, None] * C + jnp.einsum(
+            "bjhd,bjhe->bhde", kw, vx.astype(jnp.float32))
+        n = scale[..., None] * n + kw.sum(axis=1)
+        return (C, n, m_end), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    from repro.models import flags
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (qc, kc, vc, seg, dend, F_cs, F_tot))
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), xs,
+                                    unroll=flags.scan_unroll())
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh).astype(x.dtype)
+    out = _mlstm_out(p, h, z, cfg)
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf,
+                     "conv_x": _tail(xin_raw, cfg.ssm_conv)}
+    return out
+
+
+def mlstm_apply_with_state(p, x, cfg: ModelConfig, chunk: int = 128):
+    return mlstm_apply(p, x, cfg, chunk, return_state=True)
+
+
+def mlstm_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    K = cfg.ssm_conv
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+        "conv_x": jnp.zeros((B, K - 1, cfg.d_inner), dtype),
+    }
+
+
+def mlstm_state_axes(cfg: ModelConfig):
+    return {"C": ("batch", None, None, None), "n": ("batch", None, None),
+            "m": ("batch", None), "conv_x": ("batch", None, "inner")}
+
+
+def mlstm_step(p, x1, state, cfg: ModelConfig):
+    B = x1.shape[0]
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    dt_ = x1.dtype
+    xin = x1 @ p["w_xin"].astype(dt_)
+    z = x1 @ p["w_z"].astype(dt_)
+    xc1, conv_x = conv_step(state["conv_x"], xin, p["conv_x"].astype(dt_),
+                            p["b_conv_x"].astype(dt_))
+    xc1 = jax.nn.silu(xc1)
+    q = (xc1 @ p["w_q"].astype(dt_)).reshape(B, H, dh).astype(jnp.float32)
+    k = ((xc1 @ p["w_k"].astype(dt_)).reshape(B, H, dh)
+         * (dh ** -0.5)).astype(jnp.float32)
+    v = (xin @ p["w_v"].astype(dt_)).reshape(B, H, dh).astype(jnp.float32)
+    logi = (xc1 @ p["w_i"].astype(dt_)).astype(jnp.float32) + p["b_i"]
+    logf = jax.nn.log_sigmoid(
+        (xc1 @ p["w_f"].astype(dt_)).astype(jnp.float32) + p["b_f"] + _F_BIAS)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, logi)                        # [B,H]
+    wf = jnp.exp(logf + m - m_new)
+    wi = jnp.exp(logi - m_new)
+    C = wf[..., None, None] * C + wi[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = wf[..., None] * n + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h[:, None].reshape(B, 1, H, dh).astype(dt_)
+    out = _mlstm_out(p, h, z[:, None] if z.ndim == 2 else z, cfg)[:, 0]
+    return out, {"C": C, "n": n, "m": m_new, "conv_x": conv_x}
+
+
+def mlstm_ref(p, x, cfg: ModelConfig):
+    B = x.shape[0]
+
+    def step(state, x1):
+        y, state = mlstm_step(p, x1, state, cfg)
+        return state, y
+
+    _, ys = jax.lax.scan(step, mlstm_init_state(cfg, B, x.dtype),
+                         jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ===================================================================== sLSTM
+def slstm_specs(cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.num_heads
+    dh = di // H
+    t = {"mh_norm": pm.scale_ones(di),
+         "w_down": pm.dense((di, d), ("inner", "embed"))}
+    for g in ("z", "i", "f", "o"):
+        t[f"w_{g}"] = pm.dense((d, di), ("embed", "inner"))
+        t[f"r_{g}"] = pm.ParamSpec((H, dh, dh), (None, None, None),
+                                   "normal", dh ** -0.5)
+        t[f"b_{g}"] = pm.zeros((di,), ("inner",))
+    return t
+
+
+def slstm_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    di = cfg.d_inner
+    return {
+        "c": jnp.zeros((B, di), jnp.float32),
+        "n": jnp.zeros((B, di), jnp.float32),
+        "m": jnp.full((B, di), -1e30, jnp.float32),
+        "h": jnp.zeros((B, di), jnp.float32),
+    }
+
+
+def slstm_state_axes(cfg: ModelConfig):
+    return {k: ("batch", "inner") for k in ("c", "n", "m", "h")}
+
+
+def _slstm_cell(p, gates_x, state, cfg: ModelConfig):
+    """gates_x: precomputed input contributions [B, 4, di] (z,i,f,o)."""
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    B = gates_x.shape[0]
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    hh = h.reshape(B, H, dh)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", hh,
+                          p[f"r_{g}"].astype(jnp.float32)).reshape(B, -1)
+
+    zt = jnp.tanh(gates_x[:, 0] + rec("z"))
+    it = gates_x[:, 1] + rec("i")
+    ft = gates_x[:, 2] + rec("f") + _F_BIAS
+    ot = jax.nn.sigmoid(gates_x[:, 3] + rec("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    wi = jnp.exp(it - m_new)
+    wf = jnp.exp(logf + m - m_new)
+    c = wf * c + wi * zt
+    n = wf * n + wi
+    h_new = ot * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def _slstm_gates_x(p, x):
+    dt_ = x.dtype
+    gx = jnp.stack([(x @ p[f"w_{g}"].astype(dt_)) + p[f"b_{g}"].astype(dt_)
+                    for g in ("z", "i", "f", "o")], axis=-2)
+    return gx.astype(jnp.float32)                              # [B,S,4,di]
+
+
+def slstm_apply(p, x, cfg: ModelConfig, chunk: int = 0,
+                return_state: bool = False):
+    """Sequential scan over time (sLSTM is inherently recurrent)."""
+    from repro.models.layers import rms_norm
+    B, S, d = x.shape
+    gx = _slstm_gates_x(p, x)
+
+    def step(state, g1):
+        state = _slstm_cell(p, g1, state, cfg)
+        return state, state["h"]
+
+    final, hs = jax.lax.scan(step, slstm_init_state(cfg, B, x.dtype),
+                             jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # [B,S,di]
+    h = rms_norm(h, p["mh_norm"], cfg.norm_eps)
+    out = h @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_apply_with_state(p, x, cfg: ModelConfig):
+    return slstm_apply(p, x, cfg, return_state=True)
+
+
+def slstm_step(p, x1, state, cfg: ModelConfig):
+    from repro.models.layers import rms_norm
+    gx = _slstm_gates_x(p, x1[:, None, :])[:, 0]
+    state = _slstm_cell(p, gx, state, cfg)
+    h = state["h"][:, None].astype(x1.dtype)
+    h = rms_norm(h, p["mh_norm"], cfg.norm_eps)
+    return (h @ p["w_down"].astype(x1.dtype))[:, 0], state
+
+
+slstm_ref = slstm_apply  # the scan IS the sequential definition

@@ -1,0 +1,65 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer states are plain pytrees mirroring the params tree — they inherit
+the params' shardings (ZeRO-style: FSDP-sharded master params => FSDP-sharded
+m/v) and are checkpointed by repro.core as ordinary job state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_opt_state(params):
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, opt_state, params, step, cfg: OptConfig, lr=None):
+    """Returns (new_params, new_opt_state). ``step`` is the 1-based update
+    count (traced); ``lr`` overrides the schedule if given."""
+    lr = cfg.lr if lr is None else lr
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return p - lr * step_, m, v
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step — restart-safe by construction)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    t = jnp.asarray(step, jnp.float32)
+    warm = base_lr * t / jnp.maximum(warmup, 1)
+    frac = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)

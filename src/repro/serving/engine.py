@@ -1,0 +1,70 @@
+"""Batched serving engine with a checkpointable session.
+
+The session state (KV caches / recurrent states + generated tokens + cursor)
+is an ordinary pytree — repro.core dumps it like any job state. A serving
+session can therefore be stopped mid-generation, moved to another machine /
+mesh, and continued with bitwise-identical output (greedy decoding): the
+paper's "network applications" row, where CRIU could only restore on the
+same machine, becomes fully migratable because the state is abstract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params, *, max_len: int,
+                 compute_dtype=jnp.bfloat16, donate_cache: bool = True):
+        self.lm = lm
+        self.params = params
+        self.max_len = max_len
+        self.compute_dtype = compute_dtype
+        self.cache = None
+        self.out_tokens: list = []          # list of [B] np arrays
+        self.prompt_len = 0
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, tokens=t, S_max=max_len,
+                                    compute_dtype=compute_dtype))
+        self._step = jax.jit(
+            lambda p, c, t: lm.decode_step(p, c, t,
+                                           compute_dtype=compute_dtype),
+            donate_argnums=(1,) if donate_cache else ())
+
+    # ------------------------------------------------------------- serving
+    def submit(self, prompts: np.ndarray):
+        """prompts: [B, S] token ids (uniform length batch)."""
+        logits, self.cache = self._prefill(self.params, jnp.asarray(prompts))
+        self.prompt_len = prompts.shape[1]
+        self.out_tokens = [np.asarray(jnp.argmax(logits, -1))]
+
+    def step(self):
+        tok = jnp.asarray(self.out_tokens[-1])[:, None]
+        logits, self.cache = self._step(self.params, self.cache, tok)
+        self.out_tokens.append(np.asarray(jnp.argmax(logits, -1)))
+
+    def generate(self, n_tokens: int, *, on_token=None):
+        while len(self.out_tokens) < n_tokens:
+            self.step()
+            if on_token is not None:
+                on_token(self)
+        return self.generated()
+
+    def generated(self) -> np.ndarray:
+        return np.stack(self.out_tokens, axis=1)      # [B, n]
+
+    # ---------------------------------------------------------- checkpoint
+    def session_state(self):
+        """The dumpable pytree: cache + generated tokens."""
+        return {"cache": self.cache,
+                "generated": jnp.asarray(self.generated().astype(np.int32)),
+                "prompt_len": jnp.asarray(self.prompt_len, jnp.int32)}
+
+    def restore_session(self, state):
+        self.cache = state["cache"]
+        gen = np.asarray(state["generated"])
+        self.out_tokens = [gen[:, i] for i in range(gen.shape[1])]
+        self.prompt_len = int(state["prompt_len"])

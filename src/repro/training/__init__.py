@@ -1,0 +1,2 @@
+from repro.training.train_loop import (  # noqa: F401
+    make_train_step, init_train_state, train_state_pspecs)

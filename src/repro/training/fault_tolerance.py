@@ -1,0 +1,84 @@
+"""Fleet-health policies for 1000+-node runs: straggler detection and
+restart/backoff. Pure-python policy objects (unit-tested with synthetic
+timings); the launcher consumes their advice.
+
+Straggler mitigation at scale: a persistently slow host delays every
+synchronous step (the collective waits for the last arrival). The monitor
+tracks per-host step-time EWMAs and flags hosts whose EWMA exceeds
+``threshold`` x the fleet median; the advised actions are (1) proactive
+checkpoint (cheap, async), then (2) drop/replace the host and elastically
+restore — which repro.core supports natively (restore with N-1 hosts, same
+global batch).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerMonitor:
+    num_hosts: int
+    alpha: float = 0.2            # EWMA smoothing
+    threshold: float = 1.5        # x fleet median
+    warmup_steps: int = 5
+    ewma: list = field(default_factory=list)
+    steps: int = 0
+
+    def __post_init__(self):
+        if not self.ewma:
+            self.ewma = [float("nan")] * self.num_hosts
+
+    def observe(self, host_times: list[float]):
+        assert len(host_times) == self.num_hosts
+        for i, t in enumerate(host_times):
+            e = self.ewma[i]
+            self.ewma[i] = t if math.isnan(e) else \
+                (1 - self.alpha) * e + self.alpha * t
+        self.steps += 1
+
+    def _median(self) -> float:
+        s = sorted(self.ewma)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def stragglers(self) -> list[int]:
+        if self.steps < self.warmup_steps:
+            return []
+        med = self._median()
+        return [i for i, e in enumerate(self.ewma) if e > self.threshold * med]
+
+    def advice(self) -> dict:
+        s = self.stragglers()
+        if not s:
+            return {"action": "none", "hosts": []}
+        # escalate: first a proactive checkpoint, then drop persistently slow
+        return {"action": "checkpoint_and_replace", "hosts": s,
+                "expected_step_gain": max(0.0, max(self.ewma[i] for i in s)
+                                          - self._median())}
+
+
+@dataclass
+class RestartPolicy:
+    """Bounded-retry with exponential backoff; resets after stable progress."""
+    max_retries: int = 5
+    backoff_base_s: float = 5.0
+    backoff_cap_s: float = 300.0
+    stable_steps: int = 100
+    failures: int = 0
+    last_failure_step: int = -1
+
+    def on_failure(self, step: int) -> dict:
+        if (self.last_failure_step >= 0
+                and step - self.last_failure_step >= self.stable_steps):
+            self.failures = 0  # made real progress since last crash
+        self.failures += 1
+        self.last_failure_step = step
+        if self.failures > self.max_retries:
+            return {"action": "abort",
+                    "reason": f"{self.failures} failures without "
+                              f"{self.stable_steps} stable steps"}
+        delay = min(self.backoff_cap_s,
+                    self.backoff_base_s * 2 ** (self.failures - 1))
+        return {"action": "restart", "backoff_s": delay,
+                "attempt": self.failures}

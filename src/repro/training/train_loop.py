@@ -1,0 +1,87 @@
+"""Train-step factory: loss -> grads -> clip -> AdamW, as one jit-able pure
+function over the TrainState pytree.
+
+TrainState = {"params", "opt": {"m", "v"}, "step": int32[]} — a plain pytree,
+which is exactly what repro.core dumps/restores. The step function is
+donate-friendly (state in, state out).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim import (OptConfig, adamw_update, clip_by_global_norm,
+                         init_opt_state, warmup_cosine)
+
+
+def init_train_state(lm: LM, key, dtype=jnp.float32):
+    params = lm.init(key, dtype)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(lm: LM, dtype=jnp.float32):
+    return jax.eval_shape(lambda: init_train_state(lm, jax.random.PRNGKey(0),
+                                                   dtype))
+
+
+def train_state_pspecs(lm: LM, rules: dict):
+    from jax.sharding import PartitionSpec
+    p = lm.pspecs(rules)
+    return {"params": p, "opt": {"m": p, "v": p},
+            "step": PartitionSpec()}
+
+
+def make_train_step(lm: LM, opt_cfg: OptConfig, microbatches: int = 1):
+    """microbatches > 1 accumulates grads over batch slices (lax.scan) —
+    cuts activation-carry memory by the microbatch factor at ~zero flop cost
+    (the standard fit-big-batches-in-HBM lever; see EXPERIMENTS.md §Perf)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm.loss, has_aux=True)(params, batch)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+
+        def split(x):
+            mb = microbatches
+            # batch dim is axis 0 for tokens/embeds/labels, axis 1 for
+            # M-RoPE positions [3, B, S]
+            ax = 1 if x.ndim == 3 and x.shape[0] == 3 and x.dtype == jnp.int32 else 0
+            b = x.shape[ax]
+            assert b % mb == 0, (b, mb)
+            parts = jnp.moveaxis(
+                x.reshape(x.shape[:ax] + (mb, b // mb) + x.shape[ax + 1:]),
+                ax, 0)
+            return parts
+
+        mb_batch = {k: split(v) for k, v in batch.items()}
+
+        def body(acc, mb):
+            (loss, metrics), grads = grads_of(params, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(jnp.add, acc_g, grads)
+            return (acc_g, acc_l + loss), metrics
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, loss_sum), metrics = jax.lax.scan(
+            body, (zero_g, jnp.zeros((), jnp.float32)), mb_batch)
+        grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return (loss_sum / microbatches, metrics), grads
+
+    def train_step(state, batch):
+        step1 = state["step"] + 1
+        (loss, metrics), grads = accumulate(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = warmup_cosine(step1, opt_cfg.lr, opt_cfg.warmup_steps,
+                           opt_cfg.total_steps)
+        new_params, new_opt = adamw_update(grads, state["opt"],
+                                           state["params"], step1, opt_cfg,
+                                           lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt": new_opt, "step": step1}, metrics
+    return train_step

@@ -1,0 +1,30 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see 1 device; multi-device
+# behaviour is exercised via subprocesses (tests/test_distributed.py).
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(root) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env["PYTHONUNBUFFERED"] = "1"   # signal-timing tests read live stdout
+    return env

@@ -1,0 +1,175 @@
+"""Unit tests for the C/R engine: chunking, manifests, incremental dedup,
+retention/gc, corruption repair, async ordering, atomic commit."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncCheckpointer, Checkpointer, CorruptionError,
+                        MemoryTier, Registry, restore, train_meta)
+from repro.core import chunking, manifest
+from repro.core.compression import default_policy
+from repro.core.dump import dump
+from repro.core.storage import LocalDirTier
+
+
+def small_tree(seed=0, delta=0.0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32)) + delta,
+                   "b": jnp.zeros((32,))},
+        "opt": {"m": {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}},
+        "step": jnp.asarray(3, jnp.int32),
+    }
+
+
+def trees_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------------------------------------------------- chunking
+def test_chunk_roundtrip_exact():
+    arr = np.random.default_rng(0).standard_normal((1000, 7)).astype(np.float32)
+    rec = chunking.leaf_record("x", arr, chunk_bytes=4096)
+    blobs = {h: d for h, d in rec["_chunk_data"]}
+    out = chunking.assemble_leaf(rec, blobs.__getitem__)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert np.array_equal(out, arr)
+
+
+def test_chunk_granularity_drives_dedup(tmp_ckpt):
+    arr = np.zeros(1 << 16, np.float32)
+    t1 = {"x": jnp.asarray(arr)}
+    ck = Checkpointer(tmp_ckpt, chunk_bytes=4096)
+    ck.save(t1, step=1)
+    arr2 = arr.copy()
+    arr2[0] = 1.0  # touch one chunk only
+    out = ck.save({"x": jnp.asarray(arr2)}, step=2)
+    s = out["stats"]
+    assert s["chunks_deduped"] > 0
+    assert s["bytes_stored"] < s["bytes_raw"] / 4
+
+
+# ----------------------------------------------------------------- manifest
+def test_manifest_digest_tamper_detected(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt)
+    out = ck.save(small_tree(), step=1)
+    tier = LocalDirTier(tmp_ckpt)
+    p = tier.manifest_path(out["image_id"])
+    blob = tier.read_bytes(p).replace(b'"step": 1', b'"step": 2')
+    tier.write_bytes(p, blob)
+    with pytest.raises(ValueError, match="digest"):
+        restore(tmp_ckpt)
+
+
+def test_roundtrip_bitwise_and_meta(tmp_ckpt):
+    tree = small_tree()
+    ck = Checkpointer(tmp_ckpt)
+    ck.save(tree, step=3, meta=train_meta(
+        arch="qwen3-8b", step=3, data_state={"step": 3, "global_batch": 8,
+                                             "seq_len": 16, "dataset": {}}))
+    got, man = ck.load_latest(target_struct=jax.eval_shape(lambda: tree))
+    assert trees_equal(tree, got)
+    assert man["meta"]["arch"] == "qwen3-8b"
+    assert man["env"]["jax"]  # fingerprint recorded
+
+
+# -------------------------------------------------------------- incremental
+def test_incremental_parent_chain_and_savings(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt, keep_last=10)
+    ck.save(small_tree(0), step=1)
+    out2 = ck.save(small_tree(0, delta=0.0), step=2)  # identical content
+    assert out2["stats"]["bytes_stored"] == 0
+    assert out2["stats"]["chunks_deduped"] == out2["stats"]["chunks"]
+    man = restore(tmp_ckpt)[1]
+    assert man["parent"] == "step_0000000001"
+
+
+def test_retention_and_gc(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt, keep_last=2, incremental=False)
+    for s in range(1, 6):
+        ck.save(small_tree(s), step=s)
+    reg = Registry(tmp_ckpt)
+    ids = [m["image_id"] for m in reg.images()]
+    assert ids == ["step_0000000004", "step_0000000005"]
+    # gc removed chunks of deleted images
+    stats = reg.gc()
+    assert stats["removed"] == 0  # retain() already gc'ed via Checkpointer
+    got, _ = ck.load_latest()
+    assert trees_equal(got, small_tree(5))
+
+
+# -------------------------------------------------------------- corruption
+def test_corruption_without_replica_raises(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt)
+    ck.save(small_tree(), step=1)
+    for chunk in glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin")):
+        with open(chunk, "wb") as f:
+            f.write(b"junk")
+    with pytest.raises(CorruptionError):
+        restore(tmp_ckpt)
+
+
+def test_corruption_repaired_from_replica(tmp_ckpt):
+    mem = MemoryTier()
+    ck = Checkpointer(tmp_ckpt, replicas=[mem])
+    tree = small_tree()
+    ck.save(tree, step=1)
+    victim = glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin"))[0]
+    with open(victim, "wb") as f:
+        f.write(b"junk")
+    got, _ = ck.load_latest()
+    assert trees_equal(tree, got)
+    # and the primary was repaired in place
+    got2, _ = restore(tmp_ckpt)  # no replica this time
+    assert trees_equal(tree, got2)
+
+
+# ------------------------------------------------------------ atomic commit
+def test_crash_mid_dump_leaves_previous_image_valid(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt)
+    tree = small_tree()
+    ck.save(tree, step=1)
+    # simulate a crash after chunk writes but before manifest commit:
+    # write orphan chunks only
+    tier = LocalDirTier(tmp_ckpt)
+    tier.write_chunk("deadbeef" * 8, b"orphan-data")
+    os.makedirs(os.path.join(tmp_ckpt, "images", "step_0000000002"),
+                exist_ok=True)  # partial dir, no manifest
+    got, man = restore(tmp_ckpt)
+    assert man["image_id"] == "step_0000000001"
+    assert trees_equal(tree, got)
+    assert Registry(tmp_ckpt).gc()["removed"] == 1  # orphan collected
+
+
+# -------------------------------------------------------------------- async
+def test_async_ordering_and_durability(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt, keep_last=10)
+    trees = [small_tree(s) for s in range(3)]
+    for s, t in enumerate(trees):
+        ck.save_async(t, step=s + 1)
+    ck.wait()
+    reg = Registry(tmp_ckpt)
+    assert [m["step"] for m in reg.images()] == [1, 2, 3]
+    got, _ = ck.load_latest()
+    assert trees_equal(got, trees[-1])
+
+
+# --------------------------------------------------------------- delta8
+def test_delta8_bounded_error_and_parent_chain(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt, keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = small_tree(0)
+    ck.save(t1, step=1)
+    t2 = jax.tree.map(lambda x: x, t1)
+    bump = 0.01 * jax.random.normal(jax.random.PRNGKey(9), (64, 32))
+    t2["opt"]["m"]["w"] = t1["opt"]["m"]["w"] + bump
+    ck.save(t2, step=2)
+    got, _ = ck.load_latest()
+    err = float(jnp.abs(got["opt"]["m"]["w"] - t2["opt"]["m"]["w"]).max())
+    assert err <= float(jnp.abs(bump).max()) / 254 + 1e-7
+    assert trees_equal(got["params"], t2["params"])  # params lossless

@@ -1,0 +1,102 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype sweeps in
+interpret mode (assignment requirement), plus the XLA online-softmax path
+and decode attention against the same oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.models.attention import decode_attention, xla_flash
+
+SWEEP = [
+    # B, Sq, Skv, H, KV, hd, causal, window, softcap
+    (2, 256, 256, 4, 2, 64, True, 0, 0.0),
+    (1, 128, 128, 4, 4, 32, True, 0, 50.0),
+    (2, 256, 256, 8, 2, 64, True, 64, 0.0),
+    (1, 128, 384, 4, 2, 64, True, 0, 0.0),      # q_offset > 0
+    (1, 512, 512, 2, 1, 128, True, 128, 30.0),  # window + softcap, MQA
+    (3, 128, 128, 6, 6, 64, True, 0, 0.0),
+]
+
+
+def _inputs(shape, dtype):
+    B, Sq, Skv, H, KV, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_vs_ref(case, dtype):
+    B, Sq, Skv, H, KV, hd, causal, window, cap = case
+    q, k, v = _inputs((B, Sq, Skv, H, KV, hd), dtype)
+    ref = reference_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=causal,
+                              window=window, softcap=cap)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              softcap=cap, interpret=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(out.astype(jnp.float32) - ref).max()) < tol
+
+
+@pytest.mark.parametrize("case", [c for c in SWEEP if c[1] == c[2]])
+def test_xla_flash_vs_ref(case):
+    B, Sq, Skv, H, KV, hd, causal, window, cap = case
+    q, k, v = _inputs((B, Sq, Skv, H, KV, hd), jnp.float32)
+    ref = reference_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    out = xla_flash(q, k, v, causal=causal, window=window, softcap=cap,
+                    chunk_q=64, chunk_kv=64)
+    assert float(jnp.abs(out - ref).max()) < 2e-6
+
+
+@pytest.mark.parametrize("KV,window,cap", [(2, 0, 0.0), (4, 0, 50.0),
+                                           (4, 48, 0.0)])
+def test_decode_attention_vs_ref(KV, window, cap):
+    B, S, H, hd = 2, 128, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kv_len = 100
+    ref = reference_attention(q, k[:, :kv_len], v[:, :kv_len], causal=True,
+                              window=window, softcap=cap)
+    out = decode_attention(q, k, v, kv_len, window=window, softcap=cap)
+    assert float(jnp.abs(out - ref).max()) < 2e-6
+
+
+def test_windowed_path_equals_dense_path():
+    B, S, H, hd, W = 1, 256, 4, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    # chunk >= S disables the windowed fast path -> dense masked
+    dense = xla_flash(q, k, v, causal=True, window=W, chunk_q=S, chunk_kv=S)
+    fast = xla_flash(q, k, v, causal=True, window=W, chunk_q=64, chunk_kv=64)
+    assert float(jnp.abs(dense - fast).max()) < 2e-6
+
+
+def test_flash_grad_matches_ref_grad():
+    """The inner-scan checkpoint must not change gradients."""
+    B, S, H, hd = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+
+    def f_flash(q, k, v):
+        return xla_flash(q, k, v, causal=True, chunk_q=32,
+                         chunk_kv=32).sum()
+
+    def f_ref(q, k, v):
+        return reference_attention(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.abs(a - b).max()) < 5e-5

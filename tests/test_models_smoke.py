@@ -1,0 +1,105 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs; plus the
+prefill+decode == full-forward consistency oracle in fp32."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import LM
+from repro.models.frontends import synthetic_vision_embeds
+from repro.models.layers import unembed
+from repro.optim import OptConfig
+from repro.training.train_loop import init_train_state, make_train_step
+
+ARCHS = list(configs.ARCH_NAMES)
+
+
+def tiny_batch(cfg, key, B=2, S=32):
+    if cfg.frontend == "vision":
+        return synthetic_vision_embeds(cfg, B, S, key)
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch, rng):
+    cfg = configs.get_tiny(arch)
+    lm = LM(cfg)
+    state = init_train_state(lm, rng)
+    step = jax.jit(make_train_step(lm, OptConfig(warmup_steps=2,
+                                                 total_steps=10)))
+    batch = tiny_batch(cfg, rng)
+    state, m = step(state, batch)
+    assert int(state["step"]) == 1
+    assert jnp.isfinite(m["loss"]) and jnp.isfinite(m["grad_norm"])
+    # params updated and finite
+    leaves = jax.tree.leaves(state["params"])
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases_on_repeated_batch(arch, rng):
+    cfg = configs.get_tiny(arch)
+    lm = LM(cfg)
+    state = init_train_state(lm, rng)
+    step = jax.jit(make_train_step(lm, OptConfig(lr=1e-3, warmup_steps=1,
+                                                 total_steps=100)))
+    batch = tiny_batch(cfg, rng)
+    first = None
+    for _ in range(8):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first, (first, float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if configs.get_tiny(a).frontend != "vision"])
+def test_prefill_decode_matches_full_forward_fp32(arch, rng):
+    cfg = configs.get_tiny(arch)
+    if cfg.num_experts:
+        cfg = cfg.replace(capacity_factor=16.0)  # no-drop regime
+    lm = LM(cfg)
+    p = lm.init(rng)
+    B, S, nd = 2, 24, 4
+    toks = jax.random.randint(rng, (B, S + nd), 0, cfg.vocab_size)
+    x, _, _ = lm.forward(p, tokens=toks, mode="train",
+                         compute_dtype=jnp.float32)
+    full_logits = unembed(p["embed"], x, cfg)
+    logits, cache = jax.jit(lambda p, t: lm.prefill(
+        p, tokens=t, S_max=S + nd, compute_dtype=jnp.float32))(p, toks[:, :S])
+    errs = [float(jnp.abs(logits - full_logits[:, S - 1]).max())]
+    step = jax.jit(functools.partial(lm.decode_step,
+                                     compute_dtype=jnp.float32))
+    for i in range(nd - 1):
+        logits, cache = step(p, cache, toks[:, S + i:S + i + 1])
+        errs.append(float(jnp.abs(logits - full_logits[:, S + i]).max()))
+    assert max(errs) < 5e-4, errs
+
+
+def test_vlm_embeds_path_and_mrope(rng):
+    cfg = configs.get_tiny("qwen2-vl-72b")
+    lm = LM(cfg)
+    p = lm.init(rng)
+    batch = synthetic_vision_embeds(cfg, 2, 16, rng)
+    loss, m = jax.jit(lm.loss)(p, batch)
+    assert jnp.isfinite(loss)
+    # equal position streams must reduce M-RoPE to standard RoPE
+    from repro.models.layers import apply_rope
+    q = jax.random.normal(rng, (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    a = apply_rope(q, pos, 10000.0, cfg.mrope_sections)
+    b = apply_rope(q, pos, 10000.0, ())
+    assert float(jnp.abs(a - b).max()) < 1e-6
+
+
+def test_gemma2_windowing_differs_from_global(rng):
+    cfg = configs.get_tiny("gemma2-2b")
+    lm = LM(cfg)
+    p = lm.init(rng)
+    toks = jax.random.randint(rng, (1, 64), 0, cfg.vocab_size)
+    x1, _, _ = lm.forward(p, tokens=toks, compute_dtype=jnp.float32)
+    cfg2 = cfg.replace(window_pattern=(0, 0))
+    x2, _, _ = LM(cfg2).forward(p, tokens=toks, compute_dtype=jnp.float32)
+    assert float(jnp.abs(x1 - x2).max()) > 1e-4  # window actually applies

@@ -1,0 +1,53 @@
+"""Optimizer vs independent numpy reference; clipping; schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (OptConfig, adamw_update, clip_by_global_norm,
+                         global_norm, init_opt_state, warmup_cosine)
+
+
+def np_adamw(p, g, m, v, t, cfg, lr):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** t)
+    vh = v / (1 - cfg.b2 ** t)
+    return p - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p), m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptConfig(lr=1e-2)
+    rng = np.random.default_rng(0)
+    p_np = rng.standard_normal((5, 3)).astype(np.float32)
+    params = {"w": jnp.asarray(p_np)}
+    opt = init_opt_state(params)
+    m_np = np.zeros_like(p_np)
+    v_np = np.zeros_like(p_np)
+    for t in range(1, 5):
+        g_np = rng.standard_normal((5, 3)).astype(np.float32)
+        grads = {"w": jnp.asarray(g_np)}
+        params, opt = adamw_update(grads, opt, params,
+                                   jnp.asarray(t, jnp.int32), cfg, lr=1e-2)
+        p_np, m_np, v_np = np_adamw(p_np, g_np, m_np, v_np, t, cfg, 1e-2)
+        assert np.allclose(np.asarray(params["w"]), p_np, atol=1e-6), t
+        assert np.allclose(np.asarray(opt["m"]["w"]), m_np, atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # below the threshold: untouched
+    small = {"a": jnp.full((4,), 1e-3)}
+    out, _ = clip_by_global_norm(small, 1.0)
+    assert bool(jnp.all(out["a"] == small["a"]))
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, 1.0, 10, 100)) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6            # peak at end of warmup
+    assert lrs[-1] <= lrs[2]
+    assert abs(lrs[-1] - 0.1) < 1e-2           # floor
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[2:], lrs[3:]))  # monotone
