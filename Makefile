@@ -1,0 +1,16 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: check test bench-compare
+
+# fast smoke: checkpoint core in under a minute
+check:
+	bash scripts/smoke.sh
+
+# full tier-1 suite (~8 min)
+test:
+	python -m pytest -x -q
+
+# serial-vs-pipelined engine comparison (asserts bit-identical restores)
+bench-compare:
+	python benchmarks/ckpt_throughput.py --compare

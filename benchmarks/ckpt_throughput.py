@@ -130,13 +130,112 @@ def bench_fsync_modes(emit, mb=128):
                  f"{out['stats']['bytes_raw'] / dt / 1e9:.3f} GB/s")
 
 
+def multi_leaf_state(leaves=24, mb_per_leaf=4, seed=0):
+    """Many medium leaves — the layout where pipelining pays (one leaf's
+    writes overlap the next leaf's encode+hash)."""
+    n = mb_per_leaf * (1 << 20) // 4
+    k = jax.random.PRNGKey(seed)
+    keys = jax.random.split(k, leaves)
+    return {"params": {f"layer{i:02d}": jax.random.normal(keys[i], (n,),
+                                                          jnp.float32)
+                       for i in range(leaves)},
+            "step": jnp.asarray(1, jnp.int32)}
+
+
+def bench_compare(emit, leaves=24, mb_per_leaf=4, chunk_mb=1,
+                  strict_timing=False, trials=3):
+    """Serial (seed) engine vs pipelined plan/execute engine on a
+    multi-leaf dump. Always asserts bit-identical restored trees and that
+    the pipelined engine's dedup probes are batched/cached (no per-chunk
+    filesystem stat); strict_timing additionally asserts the speedup
+    (--compare mode — skipped in the default suite, where a starved
+    1-2 vCPU box could flake the whole run on timing noise). Timings are
+    best-of-``trials`` with the engines alternated, which suppresses page-
+    cache / fsync noise that otherwise dwarfs the engine difference."""
+    from repro.core.storage import LocalDirTier
+
+    tree = multi_leaf_state(leaves, mb_per_leaf)
+    jax.block_until_ready(tree)
+    tree2 = jax.tree.map(lambda x: x, tree)
+    tree2["params"]["layer00"] = tree["params"]["layer00"] + 1.0
+
+    results = {}
+    for trial in range(trials):
+        for name in ("serial", "pipelined"):
+            with tempfile.TemporaryDirectory() as tmp:
+                tier = LocalDirTier(tmp, fsync=True)
+                ck = Checkpointer(tier, keep_last=10,
+                                  chunk_bytes=chunk_mb << 20,
+                                  serial=name == "serial")
+                t0 = time.perf_counter()
+                out1 = ck.save(tree, step=1)
+                dt1 = time.perf_counter() - t0
+                tier.stat_calls = 0
+                t0 = time.perf_counter()
+                out2 = ck.save(tree2, step=2)   # incremental: mostly dedup
+                dt2 = time.perf_counter() - t0
+                probes2 = tier.stat_calls
+                t0 = time.perf_counter()
+                got, _ = ck.load_latest()
+                dtr = time.perf_counter() - t0
+            best = results.get(name)
+            if best is None or dt1 < best["dt1"]:
+                results[name] = dict(dt1=dt1, dt2=dt2, dtr=dtr, got=got,
+                                     s1=out1["stats"], s2=out2["stats"],
+                                     probes2=probes2)
+    for name in ("serial", "pipelined"):
+        r = results[name]
+        emit(f"ckpt_compare_{name}_dump,{r['dt1'] * 1e6:.0f},"
+             f"{r['s1']['bytes_raw'] / r['dt1'] / 1e9:.3f} GB/s")
+        emit(f"ckpt_compare_{name}_incr,{r['dt2'] * 1e6:.0f},"
+             f"{r['probes2']} stat probes for {r['s2']['chunks']} chunks")
+        emit(f"ckpt_compare_{name}_restore,{r['dtr'] * 1e6:.0f},"
+             f"{r['s1']['bytes_raw'] / r['dtr'] / 1e9:.3f} GB/s")
+
+    ser, pipe = results["serial"], results["pipelined"]
+    # both engines must produce the same image: bit-identical restores
+    flat_a = jax.tree.leaves(ser["got"])
+    flat_b = jax.tree.leaves(pipe["got"])
+    flat_src = [np.asarray(x) for x in jax.tree.leaves(tree2)]
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(flat_a, flat_b)), "engines disagree"
+    assert all(np.array_equal(np.asarray(a), s)
+               for a, s in zip(flat_a, flat_src)), "restore != source"
+    # and identical dedup accounting
+    for k in ("chunks", "chunks_deduped", "bytes_stored", "bytes_raw"):
+        assert ser["s2"][k] == pipe["s2"][k], (k, ser["s2"], pipe["s2"])
+    # dedup probes: serial pays O(chunks) stats, pipelined O(1) via the
+    # in-memory chunk index (remaining probes are registry manifest checks)
+    nchunks = ser["s2"]["chunks"]
+    assert ser["probes2"] >= nchunks, (ser["probes2"], nchunks)
+    assert pipe["probes2"] < max(16, nchunks // 4), \
+        (pipe["probes2"], nchunks)
+    speed = ser["dt1"] / pipe["dt1"]
+    emit(f"ckpt_compare_speedup,{speed * 1000:.0f},"
+         f"pipelined {speed:.2f}x vs serial on dump "
+         f"({ser['dt1'] * 1e3:.0f}ms -> {pipe['dt1'] * 1e3:.0f}ms)")
+    if strict_timing:
+        assert pipe["dt1"] < ser["dt1"] * 1.10, \
+            f"pipelined not faster: {pipe['dt1']:.3f}s vs {ser['dt1']:.3f}s"
+    return speed
+
+
 def run(emit=print):
     bench_full_dump_restore(emit)
     bench_incremental(emit)
     bench_async_overlap(emit)
     bench_codecs(emit)
     bench_fsync_modes(emit)
+    bench_compare(emit)
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compare", action="store_true",
+                    help="serial-vs-pipelined engine comparison only")
+    a = ap.parse_args()
+    if a.compare:
+        bench_compare(print, strict_timing=True)
+    else:
+        run()

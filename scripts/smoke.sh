@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Fast verification loop for the checkpoint core (<1 min) — the full suite
+# takes ~8 min, this is the edit-test cycle. Usage: scripts/smoke.sh [extra
+# pytest args].
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q \
+    tests/test_checkpoint_core.py \
+    tests/test_checkpoint_pipeline.py \
+    tests/test_checkpoint_properties.py \
+    "$@"

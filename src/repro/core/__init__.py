@@ -7,15 +7,24 @@ The paper's contribution as a composable module. High-level facade:
     ckpt.save_async(...); ckpt.wait()                        # overlapped
     state, man = ckpt.load_latest(target_struct, shardings)  # any topology
 
-See DESIGN.md §2 for the CRIU-concept mapping and tests/ for the Table-1
-capability matrix reproduction.
+Dumps and restores are planned (core/plan.py: immutable DumpPlan /
+RestorePlan) then executed on a shared bounded thread-pool engine
+(core/executor.py) that pipelines encode+hash with tier I/O;
+``serial=True`` keeps the single-threaded baseline for comparison.
+
+See DESIGN.md §2 for the CRIU-concept mapping, §3 for the plan/execute
+pipeline and its threading model, and tests/ for the Table-1 capability
+matrix reproduction.
 """
 from __future__ import annotations
 
 from repro.core.async_engine import AsyncCheckpointer
 from repro.core.compression import default_policy
-from repro.core.dump import dump, host_tree_by_path
+from repro.core.dump import dump, flatten_with_paths, host_tree_by_path
+from repro.core.executor import CheckpointExecutor, get_default_executor
 from repro.core.integrity import CorruptionError
+from repro.core.plan import (DumpPlan, LeafPlan, RestorePlan, plan_dump,
+                             plan_restore)
 from repro.core.preempt import EXIT_CHECKPOINTED, PreemptionHandler
 from repro.core.registry import Registry
 from repro.core.restore import latest_image_id, read_manifest, restore
@@ -24,26 +33,34 @@ from repro.core.state import serve_meta, train_meta
 
 
 class Checkpointer:
-    """Facade tying dump/restore/retention/async together."""
+    """Facade tying plan/execute, retention and async together."""
 
     def __init__(self, root, *, replicas=(), keep_last: int = 3,
                  keep_every: int = 0, codec_policy=None,
-                 incremental: bool = True, chunk_bytes: int | None = None):
-        self.root = root
-        self.replicas = replicas
+                 incremental: bool = True, chunk_bytes: int | None = None,
+                 serial: bool = False,
+                 executor: CheckpointExecutor | None = None):
+        # one Tier instance shared with the registry: gc must update the
+        # same in-memory chunk index the dump path dedups against
+        self.tier = as_tier(root)
+        self.root = self.tier
+        self.replicas = [as_tier(r) for r in replicas]
         self.keep_last = keep_last
         self.keep_every = keep_every
         self.codec_policy = codec_policy
         self.incremental = incremental
         self.chunk_bytes = chunk_bytes
-        self.registry = Registry(root)
+        self.executor = executor or (
+            CheckpointExecutor(serial=True) if serial
+            else get_default_executor())
+        self.registry = Registry(self.tier)
         self._async = None
         self._prev_host = None  # for delta8 chains
 
     # ------------------------------------------------------------------ save
-    def _save_kw(self, step, meta, topology):
+    def _save_kw(self, step, meta, topology, with_parent: bool = True):
         parent = None
-        if self.incremental:
+        if self.incremental and with_parent:
             latest = self.registry.latest()
             parent = latest["image_id"] if latest else None
         kw = dict(step=step, meta=meta or {}, parent=parent,
@@ -55,7 +72,8 @@ class Checkpointer:
 
     def save(self, tree, *, step: int, meta: dict | None = None,
              topology: dict | None = None) -> dict:
-        out = dump(tree, self.root, replicas=self.replicas,
+        out = dump(tree, self.tier, replicas=self.replicas,
+                   executor=self.executor,
                    **self._save_kw(step, meta, topology))
         if self.codec_policy is not None:
             self._prev_host = host_tree_by_path(tree)
@@ -66,9 +84,14 @@ class Checkpointer:
     def save_async(self, tree, *, step: int, meta: dict | None = None,
                    topology: dict | None = None):
         if self._async is None:
-            self._async = AsyncCheckpointer(self.root,
-                                            replicas=self.replicas)
-        self._async.dump_async(tree, **self._save_kw(step, meta, topology))
+            self._async = AsyncCheckpointer(self.tier,
+                                            replicas=self.replicas,
+                                            executor=self.executor)
+        # parent=None here: the incremental link is resolved when the
+        # ordered job runs (a submit-time registry scan would both block
+        # the step and miss still-in-flight parents)
+        kw = self._save_kw(step, meta, topology, with_parent=False)
+        self._async.dump_async(tree, resolve_parent=self.incremental, **kw)
 
     def wait(self):
         if self._async is not None:
@@ -78,11 +101,23 @@ class Checkpointer:
             return out
         return []
 
+    # ------------------------------------------------------------------ plan
+    def plan(self, tree_or_abstract, *, step: int = 0) -> DumpPlan:
+        """Dry-run dump plan (works on ShapeDtypeStructs — no device/tier
+        access): leaf partition, codec decisions, sizes."""
+        from repro.core.chunking import CHUNK_BYTES
+        return plan_dump(flatten_with_paths(tree_or_abstract), step=step,
+                         codec_policy=self.codec_policy,
+                         prev_host_tree=self._prev_host,
+                         chunk_bytes=self.chunk_bytes or CHUNK_BYTES)
+
     # ------------------------------------------------------------------ load
     def load_latest(self, target_struct=None, shardings=None):
-        return restore(self.root, target_struct=target_struct,
-                       shardings=shardings, replicas=self.replicas)
+        return restore(self.tier, target_struct=target_struct,
+                       shardings=shardings, replicas=self.replicas,
+                       executor=self.executor)
 
     def load(self, image_id: str, target_struct=None, shardings=None):
-        return restore(self.root, image_id, target_struct=target_struct,
-                       shardings=shardings, replicas=self.replicas)
+        return restore(self.tier, image_id, target_struct=target_struct,
+                       shardings=shardings, replicas=self.replicas,
+                       executor=self.executor)

@@ -1,60 +1,86 @@
 """Async checkpointing: keep dump I/O off the training critical path.
 
 dump_async() captures device state synchronously (device_get at the step
-barrier — seconds, bounded by PCIe/DMA) and hands serialization + hashing +
-tier writes to a background worker (the paper's pthreading row: the runtime's
-own helper threads are part of the checkpointable design, and quiesced by
-construction since state capture happens before enqueue). wait() surfaces
-worker errors and enforces ordering."""
+barrier — seconds, bounded by PCIe/DMA) and submits the dump as a job on
+the shared CheckpointExecutor's ordered coordinator lane: jobs commit
+strictly in submission order (the incremental parent chain stays causal)
+while each job's leaf encode/hash and chunk I/O fan out on the executor's
+cpu/io pools — the async path is "submit plan", not a private worker
+thread. wait() surfaces job errors and enforces ordering; max_pending
+bounds how many captured host trees can be alive at once (memory
+backpressure)."""
 from __future__ import annotations
 
-import queue
 import threading
 
 import jax
 
 from repro.core import dump as dump_mod
+from repro.core.executor import CheckpointExecutor, get_default_executor
 
 
 class AsyncCheckpointer:
-    def __init__(self, root, *, replicas=(), max_pending: int = 2):
+    def __init__(self, root, *, replicas=(), max_pending: int = 2,
+                 executor: CheckpointExecutor | None = None):
         self.root = root
         self.replicas = replicas
-        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self.max_pending = max_pending
+        self._ex = executor or get_default_executor()
+        self._pending: list = []    # futures, submission order
         self._results: list = []
         self._errors: list = []
-        self._worker = threading.Thread(target=self._loop, daemon=True)
-        self._worker.start()
+        self._lock = threading.Lock()
 
-    def _loop(self):
-        while True:
-            job = self._q.get()
-            if job is None:
-                return
-            host_tree, kw = job
-            try:
-                self._results.append(
-                    dump_mod.dump(host_tree, self.root,
-                                  replicas=self.replicas, **kw))
-            except Exception as e:  # surfaced on wait()
-                self._errors.append(e)
-            finally:
-                self._q.task_done()
+    def dump_async(self, tree, *, resolve_parent: bool = False, **kw):
+        """Synchronously captures (device_get) then submits the write job.
+        Blocks only if max_pending dumps are already in flight.
 
-    def dump_async(self, tree, **kw):
-        """Synchronously captures (device_get) then enqueues the write.
-        Blocks only if max_pending dumps are already in flight."""
+        resolve_parent: re-resolve the incremental parent link when the job
+        RUNS (the previous ordered dump has committed by then) instead of
+        at submit time — submit-time resolution would miss still-in-flight
+        parents and break the chain."""
         host_tree = jax.device_get(tree)   # safe against donation: host copy
-        self._q.put((host_tree, kw))
+
+        def job():
+            try:
+                if resolve_parent and kw.get("parent") is None:
+                    from repro.core.registry import Registry
+                    latest = Registry(self.root).latest()
+                    kw["parent"] = latest["image_id"] if latest else None
+                out = dump_mod.dump(host_tree, self.root,
+                                    replicas=self.replicas,
+                                    executor=self._ex, **kw)
+                with self._lock:
+                    self._results.append(out)
+            except Exception as e:         # surfaced on wait()
+                with self._lock:
+                    self._errors.append(e)
+
+        self._backpressure()
+        with self._lock:
+            self._pending.append(self._ex.submit(job))
+
+    def _backpressure(self):
+        while True:
+            with self._lock:
+                live = [f for f in self._pending if not f.done()]
+                self._pending = live
+                if len(live) < self.max_pending:
+                    return
+                oldest = live[0]
+            oldest.result()   # job() swallows dump errors; this just waits
 
     def wait(self):
         """Barrier: all enqueued dumps durable (or raise)."""
-        self._q.join()
-        if self._errors:
-            raise self._errors.pop(0)
-        return list(self._results)
+        with self._lock:
+            pending = list(self._pending)
+        for f in pending:
+            f.result()
+        with self._lock:
+            self._pending = [f for f in self._pending if not f.done()]
+            if self._errors:
+                raise self._errors.pop(0)
+            return list(self._results)
 
     def close(self):
         self.wait()
-        self._q.put(None)
-        self._worker.join(timeout=10)

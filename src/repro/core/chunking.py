@@ -4,7 +4,12 @@ A leaf (host numpy array) is serialized to raw bytes and split into
 fixed-size chunks; each chunk is SHA-256 content-addressed. Chunk
 granularity is what makes incremental dumps work: an unchanged chunk of an
 updated leaf hashes identically and is deduplicated against the pool /
-parent image — CRIU's dirty-page tracking at VMEM-block granularity."""
+parent image — CRIU's dirty-page tracking at VMEM-block granularity.
+
+Chunks are zero-copy memoryviews over the leaf's single serialized buffer:
+``chunk_views`` hashes each window in place (hashlib accepts buffers) and
+the executor writes the views straight to the tier, so a dump never holds a
+second, chunk-granular copy of a leaf in memory."""
 from __future__ import annotations
 
 import numpy as np
@@ -22,29 +27,45 @@ def bytes_to_leaf(data: bytes, dtype: str, shape) -> np.ndarray:
     return np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape).copy()
 
 
-def split_chunks(data: bytes, chunk_bytes: int = CHUNK_BYTES):
-    """-> list of (hash, bytes)."""
+def chunk_views(data, chunk_bytes: int = CHUNK_BYTES):
+    """-> list of (hash, memoryview) windows over ``data`` (no copies).
+
+    Empty input still yields one (empty) chunk so every leaf has at least
+    one addressable chunk."""
+    mv = memoryview(data)
     out = []
-    for off in range(0, max(len(data), 1), chunk_bytes):
-        part = data[off:off + chunk_bytes]
+    for off in range(0, max(len(mv), 1), chunk_bytes):
+        part = mv[off:off + chunk_bytes]
         out.append((sha256(part), part))
     return out
 
 
+def split_chunks(data: bytes, chunk_bytes: int = CHUNK_BYTES):
+    """-> list of (hash, bytes). Copying variant of chunk_views for callers
+    that need detached chunk payloads (tests, small blobs)."""
+    return [(h, bytes(v)) for h, v in chunk_views(data, chunk_bytes)]
+
+
 def leaf_record(path: str, arr: np.ndarray, chunk_bytes: int = CHUNK_BYTES,
-                codec: str = "none", codec_meta: dict | None = None) -> dict:
-    data = leaf_to_bytes(arr)
-    chunks = split_chunks(data, chunk_bytes)
+                codec: str = "none", codec_meta: dict | None = None,
+                chunk_hashes: list | None = None, nbytes: int | None = None,
+                ) -> dict:
+    """Manifest record for one stored leaf. When the caller already chunked
+    the serialized buffer (the streaming executor path), pass chunk_hashes +
+    nbytes to avoid re-serializing."""
+    if chunk_hashes is None:
+        data = leaf_to_bytes(arr)
+        nbytes = len(data)
+        chunk_hashes = [h for h, _ in chunk_views(data, chunk_bytes)]
     return {
         "path": path,
         "dtype": str(arr.dtype),
         "shape": list(arr.shape),
-        "nbytes": len(data),
+        "nbytes": int(nbytes),
         "chunk_bytes": chunk_bytes,
-        "chunks": [h for h, _ in chunks],
+        "chunks": list(chunk_hashes),
         "codec": codec,
         "codec_meta": codec_meta or {},
-        "_chunk_data": chunks,  # stripped before manifest serialization
     }
 
 

@@ -19,6 +19,20 @@ from repro.kernels.ckpt_codec.ops import delta_encode, delta_decode
 CODEC_BLOCK = 16384
 
 
+def codec_applicable(codec: str, dtype, shape, prev: np.ndarray | None) -> bool:
+    """Pure applicability predicate, evaluated at plan time so the executor
+    never has to re-discover that a lossy codec will fall back to raw.
+    Mirrors the guards inside encode_leaf exactly."""
+    if codec == "none":
+        return True
+    if codec == "bf16":
+        return np.dtype(dtype) == np.float32
+    if codec == "delta8":
+        return (prev is not None and np.dtype(dtype) == np.float32
+                and tuple(prev.shape) == tuple(shape))
+    raise ValueError(f"unknown codec {codec!r}")
+
+
 def encode_leaf(arr: np.ndarray, codec: str, prev: np.ndarray | None = None):
     """-> (stored_array, codec_meta). stored_array is what gets chunked."""
     if codec == "none":

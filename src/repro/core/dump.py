@@ -1,10 +1,11 @@
-"""criu-dump for JAX job state.
+"""criu-dump for JAX job state: plan, then execute.
 
 Flow: quiesce (device_get blocks on all in-flight work — no collective is
 ever captured mid-flight, the step boundary IS the quiesce point) ->
-per-leaf codec -> content-addressed chunking -> pool writes (deduplicated:
-unchanged chunks cost nothing — incremental dumps for free) -> manifest
-committed last (atomic rename). Multi-host: leaves are partitioned
+plan_dump (leaf partition, codec applicability, chunk geometry — pure
+data) -> CheckpointExecutor pipelines encode+hash and deduplicated pool
+writes (unchanged chunks cost nothing — incremental dumps for free) ->
+manifest committed last (atomic rename). Multi-host: leaves are partitioned
 round-robin by process; each process writes a manifest part and process 0
 merges (single-process containers just take the fast path)."""
 from __future__ import annotations
@@ -15,8 +16,9 @@ import jax
 import numpy as np
 
 from repro.core import chunking, manifest
+from repro.core.executor import CheckpointExecutor, get_default_executor
+from repro.core.plan import plan_dump
 from repro.core.storage import Tier, as_tier
-from repro.core.compression import encode_leaf
 
 
 def leaf_paths_of(tree) -> list:
@@ -40,58 +42,43 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
          codec_policy=None, prev_host_tree: dict | None = None,
          replicas=(), topology: dict | None = None,
          chunk_bytes: int = chunking.CHUNK_BYTES,
-         process_index: int = 0, num_processes: int = 1) -> dict:
+         process_index: int = 0, num_processes: int = 1,
+         executor: CheckpointExecutor | None = None) -> dict:
     """Returns {"image_id", "stats"}. ``prev_host_tree`` (path->np array)
-    enables delta8; ``parent`` links the incremental chain."""
+    enables delta8; ``parent`` links the incremental chain. ``executor``
+    defaults to the process-wide pipelined engine."""
     tier = as_tier(root)
     replicas = [as_tier(r) for r in replicas]
-    image_id = image_id or f"step_{int(step):010d}"
+    ex = executor or get_default_executor()
 
     host = jax.device_get(tree)          # quiesce + device->host capture
     leaves = flatten_with_paths(host)
+    plan = plan_dump(leaves, step=step, image_id=image_id, parent=parent,
+                     codec_policy=codec_policy,
+                     prev_host_tree=prev_host_tree, chunk_bytes=chunk_bytes,
+                     process_index=process_index,
+                     num_processes=num_processes)
 
-    records, stats = [], {"bytes_raw": 0, "bytes_stored": 0,
-                          "bytes_deduped": 0, "chunks": 0,
-                          "chunks_deduped": 0}
-    policy = codec_policy or (lambda p: "none")
-    for i, (path, arr) in enumerate(leaves):
-        if i % num_processes != process_index:
-            continue
-        arr = np.asarray(arr)
-        codec = policy(path)
-        prev = (prev_host_tree or {}).get(path)
-        stored, codec_meta = encode_leaf(arr, codec, prev)
-        rec = chunking.leaf_record(path, stored, chunk_bytes,
-                                   codec=codec, codec_meta=codec_meta)
-        rec["orig_dtype"] = str(arr.dtype)
-        rec["orig_shape"] = list(arr.shape)
-        stats["bytes_raw"] += arr.nbytes
-        for h, data in rec["_chunk_data"]:
-            stats["chunks"] += 1
-            if tier.has_chunk(h):
-                stats["chunks_deduped"] += 1
-                stats["bytes_deduped"] += len(data)
-            else:
-                tier.write_chunk(h, data)
-                stats["bytes_stored"] += len(data)
-            for r in replicas:
-                r.write_chunk(h, data)
-        records.append(rec)
+    arrays = {p: np.asarray(a) for p, a in leaves}
+    out = ex.run_dump(plan, arrays, tier, replicas,
+                      prev_host_tree=prev_host_tree)
 
-    man = manifest.build(image_id, step=step, leaves=records,
+    man = manifest.build(plan.image_id, step=step, leaves=out["records"],
                          meta=meta or {}, parent=parent,
                          env=manifest.env_fingerprint(), topology=topology)
     if num_processes > 1:
-        part = f"images/{image_id}/manifest.part{process_index}.json"
+        part = f"images/{plan.image_id}/manifest.part{process_index}.json"
         tier.write_bytes(part, manifest.to_json(man))
         if process_index == 0:
-            merge_parts(tier, image_id, num_processes, replicas=replicas)
+            merge_parts(tier, plan.image_id, num_processes,
+                        replicas=replicas)
     else:
         blob = manifest.to_json(man)
-        tier.write_bytes(tier.manifest_path(image_id), blob, atomic=True)
+        tier.write_bytes(tier.manifest_path(plan.image_id), blob,
+                         atomic=True)
         for r in replicas:
-            r.write_bytes(r.manifest_path(image_id), blob, atomic=True)
-    return {"image_id": image_id, "stats": stats}
+            r.write_bytes(r.manifest_path(plan.image_id), blob, atomic=True)
+    return {"image_id": plan.image_id, "stats": out["stats"]}
 
 
 def merge_parts(tier: Tier, image_id: str, num_processes: int, replicas=()):

@@ -1,0 +1,223 @@
+"""Plan execution: bounded thread pools that pipeline the checkpoint path.
+
+Dump pipeline (per process):
+
+  device->host capture        one batched jax.device_get (caller / dump())
+  CPU encode + hash           leaf tasks on the cpu pool: codec encode,
+                              serialize, SHA-256 every chunk window in place
+  dedup decision              one batched ``has_chunks`` probe per leaf
+                              against the tier's in-memory chunk index,
+                              plus an intra-dump claim set (so two leaves
+                              producing the same chunk store it once)
+  tier I/O                    chunk writes fan out on the io pool; chunks
+                              are zero-copy memoryviews of the leaf buffer —
+                              nothing is materialized per chunk
+
+A leaf task blocks until its own chunk writes land, so at most cpu_workers
+leaf buffers are alive at once (bounded memory), while other cpu workers
+keep encoding — encode of leaf k+1 overlaps the writes of leaf k.
+
+Restore pipeline: leaf tasks on the cpu pool, chunk reads fanned out on the
+io pool, with a (image_id, path) memo so delta8 parent leaves are fetched +
+decoded once per chain instead of once per referencing leaf.
+
+``serial=True`` runs the identical plan inline on the calling thread with
+per-chunk existence probes — the seed engine's behavior, kept as the
+baseline for benchmarks/ckpt_throughput.py --compare and as a debugging
+fallback."""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import chunking
+from repro.core.compression import decode_leaf, encode_leaf
+from repro.core.integrity import CorruptionError, read_chunk_verified
+
+
+class CheckpointExecutor:
+    """Shared, bounded execution engine for Dump/Restore plans."""
+
+    def __init__(self, *, cpu_workers: int | None = None,
+                 io_workers: int | None = None, serial: bool = False,
+                 use_chunk_index: bool | None = None):
+        self.serial = serial
+        self.use_chunk_index = (not serial) if use_chunk_index is None \
+            else use_chunk_index
+        self._cpu = self._io = None
+        if not serial:
+            ncpu = os.cpu_count() or 4
+            self._cpu = ThreadPoolExecutor(
+                cpu_workers or min(8, ncpu), thread_name_prefix="ckpt-cpu")
+            self._io = ThreadPoolExecutor(
+                io_workers or 8, thread_name_prefix="ckpt-io")
+        self._coord = None          # lazy: ordered async submission lane
+        self._coord_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ dump
+    def run_dump(self, plan, arrays: dict, tier, replicas=(),
+                 prev_host_tree: dict | None = None) -> dict:
+        """Execute a DumpPlan. arrays: {path: host np.ndarray}. Returns
+        {"records": [manifest leaf records in plan order], "stats": {...}}."""
+        if self.use_chunk_index:
+            tier.enable_chunk_index()
+            for r in replicas:
+                r.enable_chunk_index()
+        stats = {"bytes_raw": 0, "bytes_stored": 0, "bytes_deduped": 0,
+                 "chunks": 0, "chunks_deduped": 0}
+        stats_lock = threading.Lock()
+        claimed: set = set()        # intra-dump first-writer-wins
+        claim_lock = threading.Lock()
+        prev_host_tree = prev_host_tree or {}
+
+        def do_leaf(lp):
+            arr = np.asarray(arrays[lp.path])
+            prev = prev_host_tree.get(lp.path) if lp.use_prev else None
+            stored, codec_meta = encode_leaf(arr, lp.codec, prev)
+            data = chunking.leaf_to_bytes(np.asarray(stored))
+            views = chunking.chunk_views(data, plan.chunk_bytes)
+            rec = chunking.leaf_record(
+                lp.path, np.asarray(stored), plan.chunk_bytes,
+                codec=lp.codec, codec_meta=codec_meta,
+                chunk_hashes=[h for h, _ in views], nbytes=len(data))
+            rec["orig_dtype"] = str(arr.dtype)
+            rec["orig_shape"] = list(arr.shape)
+
+            present = tier.has_chunks({h for h, _ in views})
+            to_write, deduped_bytes = [], 0
+            with claim_lock:
+                for h, v in views:
+                    if h in present or h in claimed:
+                        deduped_bytes += len(v)
+                    else:
+                        claimed.add(h)
+                        to_write.append((h, v))
+
+            if self._io is None:
+                tier.write_chunks(to_write)
+                for r in replicas:
+                    r.write_chunks(views)
+            else:
+                futs = [self._io.submit(tier.write_chunk, h, v)
+                        for h, v in to_write]
+                futs += [self._io.submit(r.write_chunk, h, v)
+                         for r in replicas for h, v in views]
+                for f in futs:
+                    f.result()   # propagate the first write error
+
+            with stats_lock:
+                stats["bytes_raw"] += arr.nbytes
+                stats["chunks"] += len(views)
+                stats["chunks_deduped"] += len(views) - len(to_write)
+                stats["bytes_deduped"] += deduped_bytes
+                stats["bytes_stored"] += sum(len(v) for _, v in to_write)
+            return rec
+
+        if self._cpu is None:
+            records = [do_leaf(lp) for lp in plan.leaves]
+        else:
+            futs = [self._cpu.submit(do_leaf, lp) for lp in plan.leaves]
+            records = [f.result() for f in futs]
+        return {"records": records, "stats": stats}
+
+    # --------------------------------------------------------------- restore
+    def run_restore(self, plan, tier, replicas=()) -> dict:
+        """Execute a RestorePlan -> {path: decoded np.ndarray} for the
+        plan's top image. Raises CorruptionError on unrepairable chunks."""
+        memo: dict = {}             # (image_id, path) -> Future
+        memo_lock = threading.Lock()
+
+        def compute(iid, path):
+            rec = plan.records[iid][path]
+            bad = []
+            uniq = list(dict.fromkeys(rec["chunks"]))
+            if self._io is not None and len(uniq) > 1:
+                pref = {h: self._io.submit(read_chunk_verified, tier,
+                                           replicas, h, iid) for h in uniq}
+
+                def fetch(h):
+                    return pref[h].result()
+            else:
+                def fetch(h):
+                    return read_chunk_verified(tier, replicas, h, iid)
+
+            def read(h):
+                try:
+                    return fetch(h)
+                except KeyError:
+                    bad.append(h)
+                    return b""
+
+            stored = None
+            try:
+                stored = chunking.assemble_leaf(rec, read)
+            except AssertionError:
+                pass
+            if bad or stored is None:
+                raise CorruptionError(iid, bad or [path])
+
+            prev = None
+            if rec["codec"] == "delta8" and rec["codec_meta"].get("applied"):
+                pid = plan.manifests[iid]["parent"]
+                assert pid, f"delta8 leaf {path} without parent image"
+                prev = resolve(pid, path)
+            return decode_leaf(stored, rec["codec"], rec["codec_meta"], prev)
+
+        def resolve(iid, path):
+            key = (iid, path)
+            with memo_lock:
+                fut = memo.get(key)
+                mine = fut is None
+                if mine:
+                    fut = memo[key] = Future()
+            if not mine:
+                return fut.result()
+            try:
+                out = compute(iid, path)
+            except BaseException as e:
+                fut.set_exception(e)
+                raise
+            fut.set_result(out)
+            return out
+
+        top = plan.manifests[plan.image_id]["leaves"]
+        if self._cpu is None:
+            return {r["path"]: resolve(plan.image_id, r["path"])
+                    for r in top}
+        futs = {r["path"]: self._cpu.submit(resolve, plan.image_id,
+                                            r["path"]) for r in top}
+        return {p: f.result() for p, f in futs.items()}
+
+    # ----------------------------------------------------------- async lane
+    def submit(self, fn) -> Future:
+        """Enqueue fn on the single-threaded coordinator lane: jobs run
+        strictly in submission order (commit ordering for async dumps), and
+        each job fans its own leaf/chunk work onto the cpu/io pools."""
+        with self._coord_lock:
+            if self._coord is None:
+                self._coord = ThreadPoolExecutor(
+                    1, thread_name_prefix="ckpt-coord")
+        return self._coord.submit(fn)
+
+    def close(self):
+        for pool in (self._coord, self._cpu, self._io):
+            if pool is not None:
+                pool.shutdown(wait=True)
+        self._coord = self._cpu = self._io = None
+
+
+_default: CheckpointExecutor | None = None
+_default_lock = threading.Lock()
+
+
+def get_default_executor() -> CheckpointExecutor:
+    """Process-wide shared executor (one set of pools however many
+    Checkpointers exist)."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = CheckpointExecutor()
+        return _default

@@ -8,10 +8,32 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
+
+log = logging.getLogger(__name__)
 
 
-def sha256(data: bytes) -> str:
+def sha256(data) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+def read_chunk_verified(tier, replicas, h: str, image_id: str) -> bytes:
+    """Content-addressed read with verification + replica repair."""
+    sources = [tier] + list(replicas)
+    for k, src in enumerate(sources):
+        try:
+            data = src.read_chunk(h)
+        except FileNotFoundError:
+            continue
+        if sha256(data) == h:
+            if k > 0:  # repair the primary from the replica (overwrite the
+                # corrupt file — bypass the content-addressed dedup check)
+                tier.write_bytes(tier.chunk_path(h), data)
+                tier.note_chunk_present(h)
+                log.warning("repaired chunk %s from replica %d", h[:12], k)
+            return data
+        log.warning("chunk %s corrupt in source %d", h[:12], k)
+    raise KeyError(h)
 
 
 def manifest_digest(manifest_dict: dict) -> str:

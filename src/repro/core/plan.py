@@ -1,0 +1,127 @@
+"""Checkpoint planning: immutable plans separated from execution.
+
+A plan is pure data — which leaves this process owns, which codec each one
+gets (applicability resolved up front, so execution never branches on
+"would the codec fall back?"), chunk geometry, and for restore the fully
+loaded manifest chain. Planning does all per-dump decision making and all
+per-restore manifest parsing exactly once; the executor then only moves and
+transforms bytes. Plans are cheap to build from abstract leaves
+(ShapeDtypeStructs), which gives dry-run planning ("what would this dump
+look like?") without touching device memory."""
+from __future__ import annotations
+
+import dataclasses
+from types import MappingProxyType
+
+import numpy as np
+
+from repro.core import manifest as manifest_mod
+from repro.core.chunking import CHUNK_BYTES
+from repro.core.compression import codec_applicable
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """One leaf this process will encode + store."""
+    path: str
+    codec: str          # decided codec ("none" if the policy's pick can't apply)
+    dtype: str
+    shape: tuple
+    nbytes: int
+    use_prev: bool      # delta8: parent-leaf baseline available
+
+
+@dataclasses.dataclass(frozen=True)
+class DumpPlan:
+    image_id: str
+    step: int
+    parent: str | None
+    chunk_bytes: int
+    process_index: int
+    num_processes: int
+    leaves: tuple          # tuple[LeafPlan] — only this process's partition
+    all_paths: tuple       # every leaf path across processes (round-robin order)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaves)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(lp.nbytes for lp in self.leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class RestorePlan:
+    image_id: str
+    manifests: MappingProxyType  # image_id -> manifest, this image + the
+    #                              delta8 ancestor chain, each parsed once
+    records: MappingProxyType    # image_id -> {path: leaf record}
+
+    @property
+    def manifest(self) -> dict:
+        return self.manifests[self.image_id]
+
+    @property
+    def chain_depth(self) -> int:
+        return len(self.manifests)
+
+
+def plan_dump(leaves, *, step: int, image_id: str | None = None,
+              parent: str | None = None, codec_policy=None,
+              prev_host_tree: dict | None = None,
+              chunk_bytes: int = CHUNK_BYTES,
+              process_index: int = 0, num_processes: int = 1) -> DumpPlan:
+    """leaves: [(path, array-or-ShapeDtypeStruct)]. Pure: no tier access,
+    no device access — applicability and partition decisions only."""
+    policy = codec_policy or (lambda p: "none")
+    prev_host_tree = prev_host_tree or {}
+    plans, all_paths = [], []
+    for i, (path, leaf) in enumerate(leaves):
+        all_paths.append(path)
+        if i % num_processes != process_index:
+            continue
+        dtype = np.dtype(leaf.dtype)
+        shape = tuple(leaf.shape)
+        codec = policy(path)
+        prev = prev_host_tree.get(path)
+        applicable = codec_applicable(codec, dtype, shape, prev)
+        use_prev = applicable and codec == "delta8"
+        if not applicable:
+            codec = "none"
+        plans.append(LeafPlan(
+            path=path, codec=codec, dtype=str(dtype), shape=shape,
+            nbytes=int(np.prod(shape, dtype=np.int64)) * dtype.itemsize,
+            use_prev=use_prev))
+    return DumpPlan(
+        image_id=image_id or f"step_{int(step):010d}", step=int(step),
+        parent=parent, chunk_bytes=int(chunk_bytes),
+        process_index=process_index, num_processes=num_processes,
+        leaves=tuple(plans), all_paths=tuple(all_paths))
+
+
+def plan_restore(tier, image_id: str) -> RestorePlan:
+    """Load the manifest plus every ancestor manifest a delta8 chain can
+    reach — once. The seed path re-read + re-parsed the parent manifest for
+    every delta8 leaf (O(leaves x chain) parses); a plan makes chain
+    resolution O(chain) parses total."""
+    def read(iid):
+        return manifest_mod.from_json(
+            tier.read_bytes(tier.manifest_path(iid)))
+
+    man = read(image_id)
+    manifests, records = {image_id: man}, {}
+    cur = man
+    while cur["parent"] and any(
+            r["codec"] == "delta8" and r["codec_meta"].get("applied")
+            for r in cur["leaves"]):
+        pid = cur["parent"]
+        if pid in manifests:
+            break
+        cur = read(pid)
+        manifests[pid] = cur
+    for iid, m in manifests.items():
+        records[iid] = MappingProxyType({r["path"]: r for r in m["leaves"]})
+    return RestorePlan(image_id=image_id,
+                       manifests=MappingProxyType(manifests),
+                       records=MappingProxyType(records))

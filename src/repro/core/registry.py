@@ -66,9 +66,16 @@ class Registry:
         except FileNotFoundError:
             names = []
         for name in names:
+            if not name.endswith(".bin"):   # stray tmp from a crashed write
+                self.tier.delete(f"chunks/{name}")
+                removed += 1
+                continue
             h = name.removesuffix(".bin")
             if h not in referenced:
-                self.tier.delete(f"chunks/{name}")
+                # delete_chunk (not raw delete) keeps the tier's in-memory
+                # chunk index truthful — a stale index entry would let a
+                # later dump dedup against a chunk gc just removed
+                self.tier.delete_chunk(h)
                 removed += 1
             else:
                 kept += 1

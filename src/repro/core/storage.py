@@ -7,17 +7,44 @@ Layout (content-addressed, CRIU page-server/parent-image analogue):
 
 Chunk writes are idempotent (content addressing); the manifest is committed
 last via tmp+fsync+rename — a crash mid-dump leaves only unreferenced chunks
-(collected by registry.gc()), never a torn image."""
+(collected by registry.gc()), never a torn image.
+
+Dedup probes: every tier supports batched membership tests (``has_chunks``)
+and an opt-in in-memory chunk index (``enable_chunk_index``) loaded with one
+``listdir`` so incremental dumps stop paying one ``exists`` stat per chunk.
+The index is a cache owned by the writer: it stays correct as long as all
+chunk deletions on this tier instance go through ``delete_chunk`` (which is
+what ``Registry.gc`` does) — share one tier object between the dumper and
+its registry rather than constructing two over the same root, and never run
+gc from a *different* instance or process while a dumper with a live index
+writes (the same gc-vs-dedup race existed in the per-chunk-stat engine,
+just with a narrower window; see DESIGN.md §4)."""
 from __future__ import annotations
 
 import os
+import threading
 import time
+
+_LOCK_INIT = threading.Lock()
 
 
 class Tier:
-    """Abstract tier. rel paths use '/'."""
+    """Abstract tier. rel paths use '/'. Subclasses are not required to
+    call super().__init__() — index state defaults live on the class and
+    the lock is created lazily."""
 
-    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
+    _chunk_index: set | None = None
+    _chunk_index_lock: threading.Lock | None = None
+
+    @property
+    def _index_lock(self) -> threading.Lock:
+        if self._chunk_index_lock is None:
+            with _LOCK_INIT:
+                if self._chunk_index_lock is None:
+                    self._chunk_index_lock = threading.Lock()
+        return self._chunk_index_lock
+
+    def write_bytes(self, rel: str, data, atomic: bool = False):
         raise NotImplementedError
 
     def read_bytes(self, rel: str) -> bytes:
@@ -39,12 +66,57 @@ class Tier:
     def manifest_path(self, image_id: str) -> str:
         return f"images/{image_id}/manifest.json"
 
+    # ---- chunk index cache
+    def enable_chunk_index(self):
+        """Load (once) an in-memory set of pool hashes; afterwards
+        has_chunk/has_chunks are set lookups instead of stat probes."""
+        with self._index_lock:
+            if self._chunk_index is None:
+                try:
+                    names = self.listdir("chunks")
+                except FileNotFoundError:
+                    names = []
+                self._chunk_index = {n.removesuffix(".bin") for n in names}
+        return self
+
+    def chunk_index_enabled(self) -> bool:
+        return self._chunk_index is not None
+
     def has_chunk(self, h: str) -> bool:
+        if self._chunk_index is not None:
+            with self._index_lock:
+                return h in self._chunk_index
         return self.exists(self.chunk_path(h))
 
-    def write_chunk(self, h: str, data: bytes):
+    def has_chunks(self, hashes) -> set:
+        """Batched membership probe -> subset of ``hashes`` present."""
+        if self._chunk_index is not None:
+            with self._index_lock:
+                return self._chunk_index.intersection(hashes)
+        return {h for h in hashes if self.exists(self.chunk_path(h))}
+
+    def write_chunk(self, h: str, data):
         if not self.has_chunk(h):  # dedup
             self.write_bytes(self.chunk_path(h), data)
+            self.note_chunk_present(h)
+
+    def write_chunks(self, items):
+        """Batched chunk write: iterable of (hash, bytes-like)."""
+        for h, data in items:
+            self.write_chunk(h, data)
+
+    def delete_chunk(self, h: str):
+        self.delete(self.chunk_path(h))
+        if self._chunk_index is not None:
+            with self._index_lock:
+                self._chunk_index.discard(h)
+
+    def note_chunk_present(self, h: str):
+        """Record that chunk ``h`` now exists in the pool (index upkeep for
+        out-of-band writes, e.g. replica repair)."""
+        if self._chunk_index is not None:
+            with self._index_lock:
+                self._chunk_index.add(h)
 
     def read_chunk(self, h: str) -> bytes:
         return self.read_bytes(self.chunk_path(h))
@@ -68,17 +140,18 @@ class LocalDirTier(Tier):
         self.root = root
         self.fsync = fsync
         self.write_latency_s = write_latency_s  # remote-FS emulation knob
+        self.stat_calls = 0  # exists() probes (dedup-cost observability)
         os.makedirs(root, exist_ok=True)
 
     def _p(self, rel: str) -> str:
         return os.path.join(self.root, *rel.split("/"))
 
-    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
+    def write_bytes(self, rel: str, data, atomic: bool = False):
         if self.write_latency_s:
             time.sleep(self.write_latency_s)
         p = self._p(rel)
         os.makedirs(os.path.dirname(p), exist_ok=True)
-        tmp = p + f".tmp.{os.getpid()}"
+        tmp = p + f".tmp.{os.getpid()}.{threading.get_ident()}"
         do_sync = self.fsync is True or (self.fsync == "commit" and atomic)
         with open(tmp, "wb") as f:
             f.write(data)
@@ -92,6 +165,7 @@ class LocalDirTier(Tier):
             return f.read()
 
     def exists(self, rel: str) -> bool:
+        self.stat_calls += 1
         return os.path.exists(self._p(rel))
 
     def listdir(self, rel: str) -> list:
@@ -112,22 +186,28 @@ class MemoryTier(Tier):
 
     def __init__(self):
         self.blobs: dict = {}
+        self._blobs_lock = threading.Lock()
 
-    def write_bytes(self, rel: str, data: bytes, atomic: bool = False):
-        self.blobs[rel] = bytes(data)
+    def write_bytes(self, rel: str, data, atomic: bool = False):
+        with self._blobs_lock:
+            self.blobs[rel] = bytes(data)
 
     def read_bytes(self, rel: str) -> bytes:
-        if rel not in self.blobs:
-            raise FileNotFoundError(rel)
-        return self.blobs[rel]
+        with self._blobs_lock:
+            if rel not in self.blobs:
+                raise FileNotFoundError(rel)
+            return self.blobs[rel]
 
     def exists(self, rel: str) -> bool:
-        return rel in self.blobs
+        with self._blobs_lock:
+            return rel in self.blobs
 
     def listdir(self, rel: str) -> list:
         rel = rel.rstrip("/") + "/"
         names = set()
-        for k in self.blobs:
+        with self._blobs_lock:
+            keys = list(self.blobs)
+        for k in keys:
             if k.startswith(rel):
                 names.add(k[len(rel):].split("/")[0])
         if not names:
@@ -135,9 +215,10 @@ class MemoryTier(Tier):
         return sorted(names)
 
     def delete(self, rel: str):
-        for k in [k for k in self.blobs
-                  if k == rel or k.startswith(rel.rstrip("/") + "/")]:
-            del self.blobs[k]
+        with self._blobs_lock:
+            for k in [k for k in self.blobs
+                      if k == rel or k.startswith(rel.rstrip("/") + "/")]:
+                del self.blobs[k]
 
 
 def as_tier(t) -> Tier:

@@ -31,7 +31,8 @@ from repro.core import (Checkpointer, EXIT_CHECKPOINTED, PreemptionHandler,
 from repro.data import DataIterator, TokenDataset
 from repro.models.model import LM
 from repro.optim import OptConfig
-from repro.training.train_loop import init_train_state, make_train_step
+from repro.training.train_loop import (abstract_train_state,
+                                       init_train_state, make_train_step)
 from repro.training.fault_tolerance import StragglerMonitor
 
 
@@ -68,6 +69,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--ckpt-serial", action="store_true",
+                    help="single-threaded dump engine (debug/baseline; "
+                         "default is the pipelined plan/execute engine)")
+    ap.add_argument("--ckpt-io-workers", type=int, default=0,
+                    help="chunk-I/O threads for the pipelined engine "
+                         "(0 = engine default)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--metrics-file", default="")
     ap.add_argument("--final-ckpt", action="store_true")
@@ -85,7 +92,19 @@ def main(argv=None):
 
     ds = TokenDataset(args.data_dir, vocab_size=cfg.vocab_size,
                       seed=args.seed)
-    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    ckpt = None
+    if args.ckpt_dir:
+        executor = None
+        if args.ckpt_io_workers and not args.ckpt_serial:
+            from repro.core import CheckpointExecutor
+            executor = CheckpointExecutor(io_workers=args.ckpt_io_workers)
+        ckpt = Checkpointer(args.ckpt_dir, serial=args.ckpt_serial,
+                            executor=executor)
+        plan = ckpt.plan(abstract_train_state(lm))
+        print(f"[train] ckpt plan: {plan.num_leaves} leaves, "
+              f"{plan.total_bytes / 1e6:.1f} MB/image, "
+              f"chunk {plan.chunk_bytes >> 20} MiB, "
+              f"engine={'serial' if args.ckpt_serial else 'pipelined'}")
     preempt = PreemptionHandler().install()
     monitor = StragglerMonitor(num_hosts=1)
 

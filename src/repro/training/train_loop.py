@@ -26,6 +26,14 @@ def abstract_train_state(lm: LM, dtype=jnp.float32):
                                                    dtype))
 
 
+def train_state_paths(lm: LM, dtype=jnp.float32) -> list:
+    """Leaf paths of the train-state pytree — exactly what a checkpoint
+    manifest will contain. Useful for authoring codec policies and for
+    dry-run dump planning (Checkpointer.plan) before any step has run."""
+    from repro.core.dump import leaf_paths_of
+    return leaf_paths_of(abstract_train_state(lm, dtype))
+
+
 def train_state_pspecs(lm: LM, rules: dict):
     from jax.sharding import PartitionSpec
     p = lm.pspecs(rules)

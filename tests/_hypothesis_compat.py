@@ -1,0 +1,93 @@
+"""Minimal seeded-examples stand-in for ``hypothesis``.
+
+Used by the property-based test modules when hypothesis is not installed
+(offline CI image): each ``@given`` test runs against ``max_examples``
+deterministic pseudo-random draws instead of being skipped. No shrinking,
+no database — just enough of the API surface the repo's tests use.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # draw(rng) -> value
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        return _Strategy(
+            lambda r: bytes(r.getrandbits(8)
+                            for _ in range(r.randint(min_size, max_size))))
+
+    @staticmethod
+    def text(alphabet="abcdefgh", min_size=0, max_size=8):
+        return _Strategy(
+            lambda r: "".join(r.choice(alphabet)
+                              for _ in range(r.randint(min_size, max_size))))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda r: options[r.randrange(len(options))])
+
+    @staticmethod
+    def tuples(*parts):
+        return _Strategy(lambda r: tuple(p.draw(r) for p in parts))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=8, unique_by=None):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            out, seen, tries = [], set(), 0
+            while len(out) < n and tries < 50 * (n + 1):
+                tries += 1
+                v = elem.draw(r)
+                if unique_by is not None:
+                    k = unique_by(v)
+                    if k in seen:
+                        continue
+                    seen.add(k)
+                out.append(v)
+            return out
+        return _Strategy(draw)
+
+
+class settings:
+    max_examples = 10
+
+    def __init__(self, **_kw):
+        pass
+
+    @classmethod
+    def register_profile(cls, _name, max_examples=10, **_kw):
+        cls.max_examples = max_examples
+
+    @classmethod
+    def load_profile(cls, _name):
+        pass
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            for i in range(settings.max_examples):
+                rng = random.Random(0xC41 + i)
+                fn(*(s.draw(rng) for s in strats))
+        # deliberately no functools.wraps: pytest must see a zero-arg
+        # signature, not the strategy parameters (it would treat them
+        # as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,280 @@
+"""Plan/execute engine tests: serial-vs-pipelined equivalence, replica
+repair, multi-process merge under the executor, crash-mid-dump atomicity,
+chunk-index consistency across gc, and manifest-chain caching."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Checkpointer, CheckpointExecutor, CorruptionError,
+                        MemoryTier, Registry, plan_dump, plan_restore,
+                        restore)
+from repro.core.compression import default_policy
+from repro.core.dump import dump, flatten_with_paths, merge_parts
+from repro.core.integrity import read_chunk_verified, sha256
+from repro.core.restore import _read_chunk_verified
+from repro.core.storage import LocalDirTier
+
+
+def med_tree(seed=0, leaves=6, n=3000):
+    ks = jax.random.split(jax.random.PRNGKey(seed), leaves)
+    return {"params": {f"l{i}": jax.random.normal(ks[i], (n,))
+                       for i in range(leaves)},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# --------------------------------------------------- engine equivalence
+def test_serial_and_pipelined_produce_identical_images(tmp_path):
+    tree = med_tree()
+    outs, trees = {}, {}
+    for name in ("serial", "pipelined"):
+        ck = Checkpointer(str(tmp_path / name), chunk_bytes=4096,
+                          serial=name == "serial")
+        outs[name] = ck.save(tree, step=1)["stats"]
+        trees[name], _ = ck.load_latest()
+    assert outs["serial"] == outs["pipelined"]
+    assert trees_equal(trees["serial"], trees["pipelined"])
+    assert trees_equal(trees["pipelined"], tree)
+
+
+def test_plan_is_pure_and_matches_abstract(tmp_path):
+    tree = med_tree()
+    leaves = flatten_with_paths(jax.device_get(tree))
+    abstract = flatten_with_paths(jax.eval_shape(lambda: tree))
+    p1 = plan_dump(leaves, step=7, chunk_bytes=4096)
+    p2 = plan_dump(abstract, step=7, chunk_bytes=4096)
+    assert p1 == p2                       # abstract planning == concrete
+    assert p1.image_id == "step_0000000007"
+    assert p1.total_bytes == sum(np.asarray(a).nbytes for _, a in leaves)
+    with pytest.raises(Exception):        # frozen: plans are immutable
+        p1.step = 9
+
+
+def test_plan_resolves_codec_applicability_up_front():
+    tree = {"opt": {"m": jnp.ones((64,), jnp.float32)},
+            "params": {"w": jnp.ones((64,), jnp.float32)}}
+    leaves = flatten_with_paths(jax.device_get(tree))
+    policy = default_policy(lossy_optimizer=True)
+    # no parent baseline -> delta8 falls back to raw at PLAN time
+    p = plan_dump(leaves, step=1, codec_policy=policy)
+    assert all(lp.codec == "none" and not lp.use_prev for lp in p.leaves)
+    prev = {pth: np.asarray(a) for pth, a in leaves}
+    p2 = plan_dump(leaves, step=2, codec_policy=policy, prev_host_tree=prev)
+    by_path = {lp.path: lp for lp in p2.leaves}
+    assert by_path["opt/m"].codec == "delta8" and by_path["opt/m"].use_prev
+    assert by_path["params/w"].codec == "none"
+
+
+# --------------------------------------------------------- replica repair
+def test_read_chunk_verified_repairs_primary(tmp_ckpt):
+    mem = MemoryTier()
+    ck = Checkpointer(tmp_ckpt, replicas=[mem])
+    ck.save(med_tree(), step=1)
+    victim = glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin"))[0]
+    h = os.path.basename(victim).removesuffix(".bin")
+    with open(victim, "wb") as f:
+        f.write(b"junk")
+    data = _read_chunk_verified(ck.tier, [mem], h, "step_0000000001")
+    assert sha256(data) == h
+    with open(victim, "rb") as f:         # repaired in place
+        assert f.read() == data
+
+
+def test_read_chunk_verified_missing_everywhere_raises(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt)
+    ck.save(med_tree(), step=1)
+    with pytest.raises(KeyError):
+        read_chunk_verified(ck.tier, [MemoryTier()], "ab" * 32, "img")
+
+
+def test_pipelined_restore_repairs_from_replica(tmp_ckpt):
+    mem = MemoryTier()
+    ck = Checkpointer(tmp_ckpt, replicas=[mem], chunk_bytes=4096)
+    tree = med_tree()
+    ck.save(tree, step=1)
+    for victim in glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin"))[:3]:
+        os.remove(victim)                 # missing, not just corrupt
+    got, _ = ck.load_latest()
+    assert trees_equal(tree, got)
+    got2, _ = restore(tmp_ckpt)           # primary fully repaired
+    assert trees_equal(tree, got2)
+
+
+def test_pipelined_corruption_without_replica_raises(tmp_ckpt):
+    ck = Checkpointer(tmp_ckpt, chunk_bytes=4096)
+    ck.save(med_tree(), step=1)
+    for chunk in glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin")):
+        with open(chunk, "wb") as f:
+            f.write(b"junk")
+    with pytest.raises(CorruptionError):
+        ck.load_latest()
+
+
+# ------------------------------------------------- multi-process merge
+@pytest.mark.parametrize("serial", [True, False])
+def test_merge_parts_multiprocess_under_executor(tmp_ckpt, serial):
+    tree = med_tree(leaves=5)
+    ex = CheckpointExecutor(serial=serial)
+    # worker processes dump their partitions first; process 0 merges last
+    dump(tree, tmp_ckpt, step=1, process_index=1, num_processes=2,
+         executor=ex)
+    out = dump(tree, tmp_ckpt, step=1, process_index=0, num_processes=2,
+               executor=ex)
+    got, man = restore(tmp_ckpt)
+    assert trees_equal(tree, got)
+    paths = [r["path"] for r in man["leaves"]]
+    assert paths == sorted(paths)         # merge sorts leaves by path
+    assert len(paths) == len(jax.tree.leaves(tree))
+    assert out["stats"]["chunks"] < len(paths) + 1  # partition, not all
+    if not serial:
+        ex.close()
+
+
+def test_merge_parts_rewrites_manifest_only(tmp_ckpt):
+    tree = med_tree(leaves=4)
+    for pi in (1, 0):
+        dump(tree, tmp_ckpt, step=1, process_index=pi, num_processes=2)
+    tier = LocalDirTier(tmp_ckpt)
+    merge_parts(tier, "step_0000000001", 2)   # idempotent re-merge
+    got, _ = restore(tmp_ckpt)
+    assert trees_equal(tree, got)
+
+
+# ---------------------------------------------------- crash mid-dump
+class FlakyTier(LocalDirTier):
+    """Fails every chunk write after the first ``allow`` (crash injection)."""
+
+    def __init__(self, root, allow=3):
+        super().__init__(root, fsync=False)
+        self.allow = allow
+        self.chunk_writes = 0
+
+    def write_bytes(self, rel, data, atomic=False):
+        if rel.startswith("chunks/"):
+            self.chunk_writes += 1
+            if self.chunk_writes > self.allow:
+                raise IOError(f"injected crash at chunk {self.chunk_writes}")
+        super().write_bytes(rel, data, atomic)
+
+
+@pytest.mark.parametrize("serial", [True, False])
+def test_crash_mid_dump_leaves_only_unreferenced_chunks(tmp_path, serial):
+    root = str(tmp_path / "ck")
+    tier = FlakyTier(root, allow=10 ** 9)
+    ck = Checkpointer(tier, serial=serial, chunk_bytes=4096)
+    tree = med_tree(0)
+    ck.save(tree, step=1)
+    tier.allow = tier.chunk_writes + 2    # next dump dies mid-write
+    with pytest.raises(IOError, match="injected crash"):
+        ck.save(med_tree(1), step=2)
+    # no manifest was committed: previous image intact, orphans collectable
+    got, man = restore(root)
+    assert man["image_id"] == "step_0000000001"
+    assert trees_equal(tree, got)
+    # gc through the OWNING registry: it shares the dumper's tier, so the
+    # in-memory chunk index stays truthful after eviction
+    stats = ck.registry.gc()
+    assert stats["removed"] >= 1          # the orphaned partial chunks
+    got2, _ = restore(root)               # image still valid after gc
+    assert trees_equal(tree, got2)
+    # and the engine recovers: a later dump on the same tier succeeds
+    tier.allow = 10 ** 9
+    ck.save(med_tree(1), step=3)
+    got3, _ = ck.load_latest()
+    assert trees_equal(med_tree(1), got3)
+
+
+# ------------------------------------------------- chunk index caching
+def test_chunk_index_eliminates_per_chunk_probes(tmp_path):
+    tier = LocalDirTier(str(tmp_path / "ck"), fsync=False)
+    ck = Checkpointer(tier, chunk_bytes=4096)
+    tree = med_tree()
+    out1 = ck.save(tree, step=1)
+    tier.stat_calls = 0
+    out2 = ck.save(tree, step=2)          # identical -> all dedup
+    assert out2["stats"]["chunks_deduped"] == out2["stats"]["chunks"]
+    assert out2["stats"]["bytes_stored"] == 0
+    # cached index: probes don't scale with chunk count
+    assert tier.stat_calls < out1["stats"]["chunks"] // 2
+
+
+def test_chunk_index_survives_gc_eviction(tmp_path):
+    """gc must evict deleted chunks from the in-memory index, or a later
+    dump would dedup against a chunk that no longer exists."""
+    tier = LocalDirTier(str(tmp_path / "ck"), fsync=False)
+    ck = Checkpointer(tier, keep_last=1, incremental=False,
+                      chunk_bytes=4096)
+    t1, t2 = med_tree(1), med_tree(2)
+    ck.save(t1, step=1)
+    ck.save(t2, step=2)                   # retention evicts image 1,
+    #                                       gc removes t1's chunks
+    ck.save(t1, step=3)                   # t1's content again: must rewrite
+    got, _ = ck.load_latest()
+    assert trees_equal(t1, got)
+
+
+# --------------------------------------------- manifest / parent caching
+class CountingTier(LocalDirTier):
+    def __init__(self, root):
+        super().__init__(root, fsync=False)
+        self.manifest_reads = 0
+
+    def read_bytes(self, rel):
+        if rel.endswith("manifest.json"):
+            self.manifest_reads += 1
+        return super().read_bytes(rel)
+
+
+def test_delta8_chain_restore_parses_each_manifest_once(tmp_path):
+    tier = CountingTier(str(tmp_path / "ck"))
+    ck = Checkpointer(tier, keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    base = {"opt": {"m": {f"l{i}": jax.random.normal(
+        jax.random.PRNGKey(i), (512,)) for i in range(8)}}}
+    ck.save(base, step=1)
+    cur = base
+    for s in (2, 3):                      # chain: 3 -> 2 -> 1
+        cur = jax.tree.map(lambda x: x + 0.001, cur)
+        ck.save(cur, step=s)
+    tier.manifest_reads = 0
+    plan = plan_restore(tier, "step_0000000003")
+    assert plan.chain_depth == 3
+    ex = CheckpointExecutor(serial=True)
+    pairs = ex.run_restore(plan, tier, [])
+    # O(chain) manifest parses, NOT O(leaves x chain)
+    assert tier.manifest_reads == 3
+    assert len(pairs) == 8
+    got, _ = ck.load_latest()
+    err = max(float(jnp.abs(got["opt"]["m"][f"l{i}"]
+                            - cur["opt"]["m"][f"l{i}"]).max())
+              for i in range(8))
+    assert err < 1e-4                     # delta8 bounded error
+
+
+# ------------------------------------------------------------- async
+def test_async_shared_executor_ordering_and_errors(tmp_path):
+    ck = Checkpointer(str(tmp_path / "ok"), keep_last=10)
+    trees = [med_tree(s) for s in range(3)]
+    for s, t in enumerate(trees):
+        ck.save_async(t, step=s + 1)
+    ck.wait()
+    reg = Registry(str(tmp_path / "ok"))
+    assert [m["step"] for m in reg.images()] == [1, 2, 3]
+    assert [m["parent"] for m in reg.images()] == \
+        [None, "step_0000000001", "step_0000000002"]  # causal chain
+    got, _ = ck.load_latest()
+    assert trees_equal(got, trees[-1])
+
+    bad = FlakyTier(str(tmp_path / "bad"), allow=2)
+    ck2 = Checkpointer(bad)
+    ck2.save_async(med_tree(), step=1)
+    with pytest.raises(IOError, match="injected crash"):
+        ck2.wait()

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: seeded fixed-example fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.ckpt_codec.ckpt_codec import (delta_decode_pallas,
                                                  delta_encode_pallas)
