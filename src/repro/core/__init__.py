@@ -18,6 +18,8 @@ matrix reproduction.
 """
 from __future__ import annotations
 
+import jax
+
 from repro.core.async_engine import AsyncCheckpointer
 from repro.core.compression import default_policy
 from repro.core.dump import dump, flatten_with_paths, host_tree_by_path
@@ -55,28 +57,45 @@ class Checkpointer:
             else get_default_executor())
         self.registry = Registry(self.tier)
         self._async = None
+        self._drained = []      # async results consumed by sync-save drains
         self._prev_host = None  # for delta8 chains
+        self._prev_step = None  # step whose image _prev_host belongs to
 
     # ------------------------------------------------------------------ save
     def _save_kw(self, step, meta, topology, with_parent: bool = True):
         parent = None
-        if self.incremental and with_parent:
-            latest = self.registry.latest()
-            parent = latest["image_id"] if latest else None
+        prev_host = self._prev_host
+        if not self.incremental:
+            # no parent link will ever be written, so a delta8 leaf could
+            # never be decoded — force full encodes
+            prev_host = None
+        elif with_parent:
+            parent, prev_host = self.registry.resolve_parent_baseline(
+                self._prev_step, prev_host, step)
         kw = dict(step=step, meta=meta or {}, parent=parent,
                   codec_policy=self.codec_policy,
-                  prev_host_tree=self._prev_host, topology=topology or {})
+                  prev_host_tree=prev_host, topology=topology or {})
         if self.chunk_bytes:
             kw["chunk_bytes"] = self.chunk_bytes
         return kw
 
     def save(self, tree, *, step: int, meta: dict | None = None,
              topology: dict | None = None) -> dict:
-        out = dump(tree, self.tier, replicas=self.replicas,
+        if self._async is not None:
+            # drain in-flight async dumps first: the submit-time parent
+            # scan must see them committed (causal chain), and retain/gc
+            # below must never run while a dump is still writing — gc
+            # would reap its not-yet-manifest-referenced chunks. Keep the
+            # drained results: the next wait() still owes them to the
+            # caller
+            self._drained.extend(self._async.wait())
+        host = jax.device_get(tree)   # one capture, shared with the baseline
+        out = dump(host, self.tier, replicas=self.replicas,
                    executor=self.executor,
                    **self._save_kw(step, meta, topology))
-        if self.codec_policy is not None:
-            self._prev_host = host_tree_by_path(tree)
+        if self.codec_policy is not None and self.incremental:
+            self._prev_host = host_tree_by_path(host)
+            self._prev_step = step
         self.registry.retain(self.keep_last, self.keep_every)
         self.registry.gc()
         return out
@@ -91,11 +110,22 @@ class Checkpointer:
         # ordered job runs (a submit-time registry scan would both block
         # the step and miss still-in-flight parents)
         kw = self._save_kw(step, meta, topology, with_parent=False)
-        self._async.dump_async(tree, resolve_parent=self.incremental, **kw)
+        baseline_step = self._prev_step
+        host = jax.device_get(tree)   # one capture: the job's input and
+        #                               the next call's delta baseline
+        if self.codec_policy is not None and self.incremental:
+            # mirror save(): job N's delta baseline (kw's prev_host_tree,
+            # the tree of the PRECEDING save call) must equal the content
+            # of the image the job resolves as parent at run time, so the
+            # next call's baseline becomes this tree
+            self._prev_host = host_tree_by_path(host)
+            self._prev_step = step
+        self._async.dump_async(host, resolve_parent=self.incremental,
+                               baseline_step=baseline_step, **kw)
 
     def wait(self):
         if self._async is not None:
-            out = self._async.wait()
+            out, self._drained = self._drained + self._async.wait(), []
             self.registry.retain(self.keep_last, self.keep_every)
             self.registry.gc()
             return out

@@ -30,57 +30,76 @@ class AsyncCheckpointer:
         self._results: list = []
         self._errors: list = []
         self._lock = threading.Lock()
+        # hard memory-backpressure bound: one permit per captured host
+        # tree, released when its job finishes (a check-then-append on
+        # the pending list would let concurrent callers overshoot)
+        self._slots = threading.Semaphore(max_pending)
 
-    def dump_async(self, tree, *, resolve_parent: bool = False, **kw):
+    def dump_async(self, tree, *, resolve_parent: bool = False,
+                   baseline_step: int | None = None, **kw):
         """Synchronously captures (device_get) then submits the write job.
         Blocks only if max_pending dumps are already in flight.
 
         resolve_parent: re-resolve the incremental parent link when the job
         RUNS (the previous ordered dump has committed by then) instead of
         at submit time — submit-time resolution would miss still-in-flight
-        parents and break the chain."""
-        host_tree = jax.device_get(tree)   # safe against donation: host copy
+        parents and break the chain.
+
+        baseline_step: the step whose image kw's ``prev_host_tree`` is the
+        content of. A delta8 leaf is only valid if it is decoded against
+        the same values it was encoded against, so if the run-time parent
+        is a different image (the baseline's dump failed or its image was
+        reaped) the delta baseline is dropped — full encode beats silent
+        corruption."""
+        self._slots.acquire()   # blocks while max_pending trees are alive
 
         def job():
             try:
-                if resolve_parent and kw.get("parent") is None:
-                    from repro.core.registry import Registry
-                    latest = Registry(self.root).latest()
-                    kw["parent"] = latest["image_id"] if latest else None
-                out = dump_mod.dump(host_tree, self.root,
-                                    replicas=self.replicas,
-                                    executor=self._ex, **kw)
-                with self._lock:
-                    self._results.append(out)
-            except Exception as e:         # surfaced on wait()
-                with self._lock:
-                    self._errors.append(e)
+                try:
+                    if resolve_parent and kw.get("parent") is None:
+                        from repro.core.registry import Registry
+                        kw["parent"], kw["prev_host_tree"] = \
+                            Registry(self.root).resolve_parent_baseline(
+                                baseline_step, kw.get("prev_host_tree"),
+                                kw["step"])
+                    out = dump_mod.dump(host_tree, self.root,
+                                        replicas=self.replicas,
+                                        executor=self._ex, **kw)
+                    with self._lock:
+                        self._results.append(out)
+                except Exception as e:     # surfaced on wait()
+                    with self._lock:
+                        self._errors.append(e)
+            finally:
+                self._slots.release()
 
-        self._backpressure()
-        with self._lock:
-            self._pending.append(self._ex.submit(job))
-
-    def _backpressure(self):
-        while True:
+        try:
+            host_tree = jax.device_get(tree)   # donation-safe: host copy
             with self._lock:
-                live = [f for f in self._pending if not f.done()]
-                self._pending = live
-                if len(live) < self.max_pending:
-                    return
-                oldest = live[0]
-            oldest.result()   # job() swallows dump errors; this just waits
+                self._pending = [f for f in self._pending if not f.done()]
+                self._pending.append(self._ex.submit(job))
+        except BaseException:
+            self._slots.release()
+            raise
 
     def wait(self):
-        """Barrier: all enqueued dumps durable (or raise)."""
+        """Barrier: all dumps enqueued since the last barrier durable (or
+        raise). Errors are drained per barrier — a failure surfaced here
+        must not resurface on a later, healthy barrier — but the results
+        of dumps that DID commit survive an error and are returned by the
+        next wait(): they are durable on disk and the caller is owed the
+        record."""
         with self._lock:
             pending = list(self._pending)
         for f in pending:
             f.result()
         with self._lock:
             self._pending = [f for f in self._pending if not f.done()]
-            if self._errors:
-                raise self._errors.pop(0)
-            return list(self._results)
+            errors, self._errors = self._errors, []
+            if errors:
+                raise errors[0]
+            results, self._results = self._results, []
+            return results
 
     def close(self):
         self.wait()

@@ -22,7 +22,7 @@ CODEC_BLOCK = 16384
 def codec_applicable(codec: str, dtype, shape, prev: np.ndarray | None) -> bool:
     """Pure applicability predicate, evaluated at plan time so the executor
     never has to re-discover that a lossy codec will fall back to raw.
-    Mirrors the guards inside encode_leaf exactly."""
+    encode_leaf guards on it too — one predicate, no drift."""
     if codec == "none":
         return True
     if codec == "bf16":
@@ -37,14 +37,12 @@ def encode_leaf(arr: np.ndarray, codec: str, prev: np.ndarray | None = None):
     """-> (stored_array, codec_meta). stored_array is what gets chunked."""
     if codec == "none":
         return arr, {}
+    if not codec_applicable(codec, arr.dtype, arr.shape, prev):
+        return arr, {"applied": False}
     if codec == "bf16":
-        if arr.dtype != np.float32:
-            return arr, {"applied": False}
         return np.asarray(jnp.asarray(arr).astype(jnp.bfloat16)), \
             {"applied": True, "orig_dtype": "float32"}
     if codec == "delta8":
-        if prev is None or prev.shape != arr.shape or arr.dtype != np.float32:
-            return arr, {"applied": False}
         flat = jnp.asarray(arr).reshape(-1)
         pflat = jnp.asarray(prev).reshape(-1)
         q, scale, dirty = delta_encode(flat, pflat, block=CODEC_BLOCK)

@@ -103,8 +103,14 @@ class CheckpointExecutor:
             else:
                 futs = [self._io.submit(tier.write_chunk, h, v)
                         for h, v in to_write]
-                futs += [self._io.submit(r.write_chunk, h, v)
-                         for r in replicas for h, v in views]
+                for r in replicas:
+                    # batched probe per replica too: don't fan out a
+                    # no-op io task for every already-mirrored chunk
+                    # (write_chunk still dedups the benign race where
+                    # two leaves submit the same absent chunk)
+                    rpresent = r.has_chunks({h for h, _ in views})
+                    futs += [self._io.submit(r.write_chunk, h, v)
+                             for h, v in views if h not in rpresent]
                 for f in futs:
                     f.result()   # propagate the first write error
 
@@ -163,6 +169,9 @@ class CheckpointExecutor:
             if rec["codec"] == "delta8" and rec["codec_meta"].get("applied"):
                 pid = plan.manifests[iid]["parent"]
                 assert pid, f"delta8 leaf {path} without parent image"
+                # a corrupt self-parent manifest must error, not block
+                # forever on its own memo future
+                assert pid != iid, f"cyclic parent chain at {iid}"
                 prev = resolve(pid, path)
             return decode_leaf(stored, rec["codec"], rec["codec_meta"], prev)
 

@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import manifest as manifest_mod
 from repro.core.chunking import CHUNK_BYTES
 from repro.core.compression import codec_applicable
+from repro.core.integrity import CorruptionError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,8 @@ def plan_dump(leaves, *, step: int, image_id: str | None = None,
         all_paths.append(path)
         if i % num_processes != process_index:
             continue
+        if not hasattr(leaf, "dtype"):   # python-scalar / list leaf
+            leaf = np.asarray(leaf)
         dtype = np.dtype(leaf.dtype)
         shape = tuple(leaf.shape)
         codec = policy(path)
@@ -117,7 +120,11 @@ def plan_restore(tier, image_id: str) -> RestorePlan:
             for r in cur["leaves"]):
         pid = cur["parent"]
         if pid in manifests:
-            break
+            # the walk is linear (one parent per image), so revisiting an
+            # image means a parent cycle — the executor would deadlock on
+            # its own memo future chasing it
+            raise CorruptionError(pid, [f"cyclic parent chain via "
+                                        f"{cur['image_id']}"])
         cur = read(pid)
         manifests[pid] = cur
     for iid, m in manifests.items():

@@ -1,8 +1,32 @@
 """Checkpoint catalog: retention policy + content-pool garbage collection."""
 from __future__ import annotations
 
+import os
+import re
+
 from repro.core.restore import read_manifest
 from repro.core.storage import as_tier
+
+# in-flight writes look like "<hash>.bin.tmp.<pid>.<tid>" (LocalDirTier)
+_TMP_RE = re.compile(r"\.tmp\.(\d+)\.(\d+)$")
+# a write never stays in its tmp name this long; older means crashed
+GC_TMP_GRACE_S = 15 * 60
+# a dead-looking pid is only proof once the file has also been quiet for
+# a moment: on a shared filesystem the writer may live on another host
+# (or pid namespace), where a local liveness probe always says "dead"
+GC_TMP_DEAD_PID_GRACE_S = 60
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        return True     # e.g. EPERM: exists but owned by someone else
+    return True
+
+
 
 
 class Registry:
@@ -24,18 +48,58 @@ class Registry:
         return imgs[-1] if imgs else None
 
     def _parents_of(self, keep_ids: set) -> set:
-        """delta8 chains need their parents alive."""
+        """delta8 chains need their parents alive. A parent *link* alone
+        (plain incremental bookkeeping on a full-encode image) does not
+        pin the parent — following every link would keep every ancestor
+        of the newest image and make retention a no-op."""
         out = set(keep_ids)
         frontier = list(keep_ids)
         while frontier:
             i = frontier.pop()
             man = read_manifest(self.tier, i)
             p = man["parent"]
-            if p and p not in out and self.tier.exists(
-                    self.tier.manifest_path(p)):
+            needs_parent = any(
+                r["codec"] == "delta8" and r["codec_meta"].get("applied")
+                for r in man["leaves"])     # mirrors plan_restore's chain
+            if (p and p not in out and needs_parent
+                    and self.tier.exists(self.tier.manifest_path(p))):
                 out.add(p)
                 frontier.append(p)
         return out
+
+    def resolve_parent_baseline(self, baseline_step, prev_host, step):
+        """Shared incremental-chain rule (sync submit time and async run
+        time): the parent is the latest committed image, and the delta8
+        baseline tree is kept only when it is provably that image's
+        content — its step matches the step the baseline was captured at.
+        Otherwise the baseline is dropped (full encode): a delta decoded
+        against a different parent's values restores silently wrong
+        numbers.
+
+        Dumping a step that is not strictly newer than the latest image
+        rewrites history (overwrite or rollback): the divergent future is
+        deleted first — its images delta-depend on, or would form parent
+        cycles with, the image about to be overwritten — and the chain
+        restarts among the survivors."""
+        latest = self.latest()
+        if latest and latest["step"] >= int(step):
+            self.truncate_from(step)
+            latest = self.latest()
+        parent = latest["image_id"] if latest else None
+        if prev_host is not None and (latest is None
+                                      or latest["step"] != baseline_step):
+            prev_host = None
+        return parent, prev_host
+
+    def truncate_from(self, step) -> list:
+        """History rewrite: delete every image at or after ``step``.
+        Returns deleted image ids (their chunks fall to the next gc)."""
+        deleted = []
+        for m in self.images():
+            if m["step"] >= int(step):
+                self.tier.delete(f"images/{m['image_id']}")
+                deleted.append(m["image_id"])
+        return deleted
 
     def retain(self, keep_last: int = 3, keep_every: int = 0) -> list:
         """Delete images outside the policy (keeping delta-chain parents).
@@ -66,9 +130,13 @@ class Registry:
         except FileNotFoundError:
             names = []
         for name in names:
-            if not name.endswith(".bin"):   # stray tmp from a crashed write
-                self.tier.delete(f"chunks/{name}")
-                removed += 1
+            if not name.endswith(".bin"):
+                # possibly a writer's in-flight tmp file (a concurrent
+                # dump in this or another process): reap only when
+                # provably stray, never out from under a live write
+                if self._tmp_is_stray(name):
+                    self.tier.delete(f"chunks/{name}")
+                    removed += 1
                 continue
             h = name.removesuffix(".bin")
             if h not in referenced:
@@ -80,3 +148,22 @@ class Registry:
             else:
                 kept += 1
         return {"removed": removed, "kept": kept}
+
+    def _tmp_is_stray(self, name: str) -> bool:
+        """True only for a non-'.bin' chunk entry that is provably NOT a
+        live in-flight write. A live local writer pid vetoes reaping
+        outright (even a pathologically slow write — e.g. hung network
+        FS — must not lose its tmp out from under it, or its os.replace
+        dies with FileNotFoundError and kills the dump). Otherwise the
+        file must have been quiet: briefly when its pid is provably dead
+        locally, a long grace window when the pid is unknown (possibly a
+        writer on another host of a shared tier)."""
+        m = _TMP_RE.search(name)
+        alive = _pid_alive(int(m.group(1))) if m else None
+        if alive:
+            return False
+        age = self.tier.age_s(f"chunks/{name}")
+        if age is None:
+            return False
+        return age > (GC_TMP_DEAD_PID_GRACE_S if alive is False
+                      else GC_TMP_GRACE_S)

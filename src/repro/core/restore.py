@@ -16,7 +16,6 @@ import jax
 
 from repro.core import manifest
 from repro.core.executor import CheckpointExecutor, get_default_executor
-from repro.core.integrity import read_chunk_verified
 from repro.core.plan import plan_restore
 from repro.core.storage import as_tier
 
@@ -34,13 +33,6 @@ def latest_image_id(tier) -> str | None:
         return None
     best = max(ids, key=lambda i: read_manifest(tier, i)["step"])
     return best
-
-
-def _read_chunk_verified(tier, replicas, h: str, image_id: str):
-    """Content-addressed read with verification + replica repair.
-    (Implementation lives in integrity.read_chunk_verified; kept here as
-    the historical entry point.)"""
-    return read_chunk_verified(tier, replicas, h, image_id)
 
 
 def _unflatten_paths(pairs: dict):

@@ -59,6 +59,11 @@ class Tier:
     def delete(self, rel: str):
         raise NotImplementedError
 
+    def age_s(self, rel: str) -> float | None:
+        """Seconds since ``rel`` was last modified, or None when the tier
+        can't tell (gc then errs on the side of keeping the entry)."""
+        return None
+
     # ---- layout helpers
     def chunk_path(self, h: str) -> str:
         return f"chunks/{h}.bin"
@@ -167,6 +172,12 @@ class LocalDirTier(Tier):
     def exists(self, rel: str) -> bool:
         self.stat_calls += 1
         return os.path.exists(self._p(rel))
+
+    def age_s(self, rel: str) -> float | None:
+        try:
+            return max(0.0, time.time() - os.path.getmtime(self._p(rel)))
+        except OSError:
+            return None
 
     def listdir(self, rel: str) -> list:
         return os.listdir(self._p(rel))

@@ -3,6 +3,8 @@ repair, multi-process merge under the executor, crash-mid-dump atomicity,
 chunk-index consistency across gc, and manifest-chain caching."""
 import glob
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +17,6 @@ from repro.core import (Checkpointer, CheckpointExecutor, CorruptionError,
 from repro.core.compression import default_policy
 from repro.core.dump import dump, flatten_with_paths, merge_parts
 from repro.core.integrity import read_chunk_verified, sha256
-from repro.core.restore import _read_chunk_verified
 from repro.core.storage import LocalDirTier
 
 
@@ -82,7 +83,7 @@ def test_read_chunk_verified_repairs_primary(tmp_ckpt):
     h = os.path.basename(victim).removesuffix(".bin")
     with open(victim, "wb") as f:
         f.write(b"junk")
-    data = _read_chunk_verified(ck.tier, [mem], h, "step_0000000001")
+    data = read_chunk_verified(ck.tier, [mem], h, "step_0000000001")
     assert sha256(data) == h
     with open(victim, "rb") as f:         # repaired in place
         assert f.read() == data
@@ -278,3 +279,248 @@ def test_async_shared_executor_ordering_and_errors(tmp_path):
     ck2.save_async(med_tree(), step=1)
     with pytest.raises(IOError, match="injected crash"):
         ck2.wait()
+
+
+def opt_tree(seed=0, shift=0.0):
+    base = {"opt": {"m": {f"l{i}": jax.random.normal(
+        jax.random.PRNGKey(seed + i), (512,)) for i in range(4)}}}
+    return jax.tree.map(lambda x: x + shift, base) if shift else base
+
+
+def max_err(a, b):
+    return max(float(jnp.abs(jnp.asarray(x) - jnp.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_async_delta8_baseline_tracks_runtime_parent(tmp_path):
+    """save(t1); save_async(t2); save_async(t3): each async delta must be
+    encoded against the tree of the image it resolves as parent at run
+    time, not a stale sync-save baseline (silent-corruption regression)."""
+    bump = 0.5
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    t2 = jax.tree.map(lambda x: x + bump, t1)
+    t3 = jax.tree.map(lambda x: x + bump, t2)
+    ck.save(t1, step=1)
+    ck.save_async(t2, step=2)
+    ck.save_async(t3, step=3)
+    ck.wait()
+    reg = Registry(str(tmp_path / "ck"))
+    assert [m["parent"] for m in reg.images()] == \
+        [None, "step_0000000001", "step_0000000002"]
+    got, _ = ck.load_latest()
+    assert max_err(got, t3) <= bump / 254 + 1e-6  # documented delta8 bound
+
+
+def test_sync_save_drains_pending_async(tmp_path):
+    """save() after save_async(): the sync dump must see the async images
+    committed (causal parent chain) and gc must not run while they are
+    still writing."""
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=10)
+    ck.save_async(med_tree(0), step=1)
+    ck.save_async(med_tree(1), step=2)
+    ck.save(med_tree(2), step=3)
+    reg = ck.registry
+    assert [m["step"] for m in reg.images()] == [1, 2, 3]
+    assert [m["parent"] for m in reg.images()] == \
+        [None, "step_0000000001", "step_0000000002"]
+    for s in (1, 2, 3):
+        got, _ = ck.load(f"step_{s:010d}")
+        assert trees_equal(got, med_tree(s - 1))
+
+
+def test_delta_baseline_dropped_when_parent_image_lost(tmp_path):
+    """If the image the cached baseline belongs to is gone by dump time,
+    the delta must be dropped (full encode), never applied against a
+    different parent."""
+    tier = LocalDirTier(str(tmp_path / "ck"), fsync=False)
+    ck = Checkpointer(tier, keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    ck.save(t1, step=1)
+    tier.delete("images/step_0000000001")   # parent lost out-of-band
+    ck.registry.gc()
+    t2 = jax.tree.map(lambda x: x + 1.0, t1)
+    ck.save(t2, step=2)
+    got, man = ck.load_latest()
+    assert man["parent"] is None
+    assert trees_equal(got, t2)             # full encode: bit-exact
+
+
+def test_python_scalar_leaves_roundtrip(tmp_path):
+    """Plain int/float pytree leaves checkpointed fine in the serial
+    seed engine; plan_dump must coerce them too."""
+    ck = Checkpointer(str(tmp_path / "ck"))
+    tree = {"params": jax.random.normal(jax.random.PRNGKey(0), (128,)),
+            "epoch": 3, "lr": 0.125}
+    ck.save(tree, step=1)
+    got, _ = ck.load_latest()
+    assert trees_equal(got, tree)
+
+
+def test_retention_prunes_full_encode_incremental_images(tmp_path):
+    """Parent links are plain bookkeeping on full-encode images; only
+    applied delta8 leaves pin the parent. keep_last must actually
+    delete (was: every ancestor kept transitively -> retention no-op)."""
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=2)
+    for s in range(1, 7):
+        ck.save(med_tree(s), step=s)
+    assert [m["step"] for m in ck.registry.images()] == [5, 6]
+    for s in (5, 6):                      # both survivors restorable
+        got, _ = ck.load(f"step_{s:010d}")
+        assert trees_equal(got, med_tree(s))
+
+
+def test_step_reuse_does_not_write_self_parent(tmp_path):
+    """Re-dumping an existing step overwrites that image; linking the
+    new image to it would be a self-parent cycle whose restore never
+    terminates."""
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    t2 = jax.tree.map(lambda x: x + 1.0, t1)
+    ck.save(t1, step=5)
+    ck.save(t2, step=5)                   # same image id, fresh chain
+    got, man = ck.load_latest()
+    assert man["parent"] is None
+    assert trees_equal(got, t2)
+
+
+def test_rollback_redump_truncates_divergent_future(tmp_path):
+    """Re-dumping an OLDER step rewrites history: the future images
+    delta-depend on (or would cycle with) the image being overwritten,
+    so they are deleted and the chain restarts."""
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    t2 = jax.tree.map(lambda x: x + 1.0, t1)
+    t1b = jax.tree.map(lambda x: x - 1.0, t1)
+    ck.save(t1, step=1)
+    ck.save(t2, step=2)
+    ck.save(t1b, step=1)                  # rollback re-dump
+    imgs = ck.registry.images()
+    assert [m["step"] for m in imgs] == [1]
+    got, man = ck.load_latest()
+    assert man["parent"] is None          # fresh chain, no cycle
+    assert trees_equal(got, t1b)          # full encode: bit-exact
+
+
+def test_cyclic_parent_chain_raises_not_hangs(tmp_path):
+    """A corrupt A<->B parent cycle must raise CorruptionError at plan
+    time, not deadlock the executor on its own memo future."""
+    from repro.core import manifest as manifest_mod
+    tier = LocalDirTier(str(tmp_path / "ck"), fsync=False)
+    ck = Checkpointer(tier, keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    ck.save(t1, step=1)
+    ck.save(jax.tree.map(lambda x: x + 0.5, t1), step=2)
+    man2 = plan_restore(tier, "step_0000000002").manifest
+    assert man2["parent"] == "step_0000000001"
+    # forge image 1 as a delta image whose parent is image 2 (valid digest)
+    forged = manifest_mod.build("step_0000000001", step=1,
+                                leaves=list(man2["leaves"]),
+                                meta={}, parent="step_0000000002",
+                                env=man2["env"], topology=man2["topology"])
+    tier.write_bytes(tier.manifest_path("step_0000000001"),
+                     manifest_mod.to_json(forged), atomic=True)
+    with pytest.raises(CorruptionError, match="cyclic parent chain"):
+        plan_restore(tier, "step_0000000002")
+
+
+def test_sync_drain_preserves_async_results_for_wait(tmp_path):
+    """save() drains the async lane; the drained results still belong to
+    the next wait() caller."""
+    ck = Checkpointer(str(tmp_path / "ck"), keep_last=10)
+    ck.save_async(med_tree(0), step=1)
+    ck.save(med_tree(1), step=2)          # drains the async dump
+    ck.save_async(med_tree(2), step=3)
+    out = ck.wait()
+    assert [o["image_id"] for o in out] == \
+        ["step_0000000001", "step_0000000003"]
+    assert ck.wait() == []                # barrier semantics: consumed
+
+
+def test_failed_barrier_preserves_committed_results(tmp_path):
+    """A barrier holding one committed and one failed dump raises, but
+    the committed dump's record is durable and owed to the next wait()."""
+    probe = FlakyTier(str(tmp_path / "probe"), allow=10 ** 9)
+    Checkpointer(probe).save(med_tree(0), step=1)
+    n = probe.chunk_writes                # writes one identical dump needs
+    bad = FlakyTier(str(tmp_path / "bad"), allow=n)
+    ck = Checkpointer(bad, keep_last=10)
+    ck.save_async(med_tree(0), step=1)    # exactly n writes: commits
+    ck.save_async(med_tree(1), step=2)    # dies on its first new chunk
+    with pytest.raises(IOError, match="injected crash"):
+        ck.wait()
+    out = ck.wait()
+    assert [o["image_id"] for o in out] == ["step_0000000001"]
+
+
+def test_wait_barriers_are_independent(tmp_path):
+    """A failure surfaced by one wait() must not resurface on a later,
+    healthy barrier, and results are per-barrier."""
+    bad = FlakyTier(str(tmp_path / "bad"), allow=2)
+    ck = Checkpointer(bad)
+    ck.save_async(med_tree(0), step=1)
+    with pytest.raises(IOError, match="injected crash"):
+        ck.wait()
+    bad.allow = 10 ** 9                   # tier recovers
+    ck.save_async(med_tree(1), step=2)
+    out = ck.wait()                       # no stale error, fresh results
+    assert len(out) == 1
+    got, _ = ck.load_latest()
+    assert trees_equal(got, med_tree(1))
+
+
+def test_non_incremental_delta_policy_stays_restorable(tmp_path):
+    """incremental=False never writes a parent link, so a delta8 policy
+    must fall back to full encodes — an applied delta with parent=None is
+    unrestorable."""
+    ck = Checkpointer(str(tmp_path / "ck"), incremental=False, keep_last=10,
+                      codec_policy=default_policy(lossy_optimizer=True))
+    t1 = opt_tree()
+    t2 = jax.tree.map(lambda x: x + 1.0, t1)
+    ck.save(t1, step=1)
+    ck.save(t2, step=2)
+    got, man = ck.load_latest()
+    assert man["parent"] is None
+    assert trees_equal(got, t2)           # full encode: bit-exact
+    t3 = jax.tree.map(lambda x: x + 2.0, t1)
+    ck.save_async(t3, step=3)             # async path: same rule
+    ck.wait()
+    got3, man3 = ck.load_latest()
+    assert man3["parent"] is None
+    assert trees_equal(got3, t3)
+
+
+def test_gc_spares_live_tmp_reaps_stray_tmp(tmp_path):
+    tier = LocalDirTier(str(tmp_path / "ck"), fsync=False)
+    ck = Checkpointer(tier, chunk_bytes=4096)
+    ck.save(med_tree(), step=1)
+    cdir = os.path.join(tier.root, "chunks")
+    live = os.path.join(
+        cdir, f"aa.bin.tmp.{os.getpid()}.{threading.get_ident()}")
+    fresh_dead = os.path.join(cdir, "bb.bin.tmp.999999999.1")
+    quiet_dead = os.path.join(cdir, "dd.bin.tmp.999999999.2")
+    aged = os.path.join(cdir, "cc.bin.partial")   # no parseable pid
+    for p in (live, fresh_dead, quiet_dead, aged):
+        with open(p, "wb") as f:
+            f.write(b"x")
+    old = time.time() - 3600
+    os.utime(aged, (old, old))
+    quiet = time.time() - 120
+    os.utime(quiet_dead, (quiet, quiet))
+    ck.registry.gc()
+    assert os.path.exists(live)        # live writer's tmp: untouched
+    # dead-looking pid but written seconds ago: could be a live writer on
+    # another host of a shared tier — kept
+    assert os.path.exists(fresh_dead)
+    assert not os.path.exists(quiet_dead)  # dead pid + quiet: reaped
+    assert not os.path.exists(aged)    # pid unknown + long-aged: reaped
+    os.utime(live, (old, old))         # a LIVE pid vetoes reaping outright
+    ck.registry.gc()                   # (hung-FS write must keep its tmp)
+    assert os.path.exists(live)
+    os.remove(live)                    # leave the pool clean
+    os.remove(fresh_dead)
