@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test bench-compare
+.PHONY: check test lint bench-compare bench-smoke bench-migration run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -11,6 +11,22 @@ check:
 test:
 	python -m pytest -x -q
 
+# style + correctness lint (config in pyproject.toml; CI gate)
+lint:
+	python -m ruff check .
+
 # serial-vs-pipelined engine comparison (asserts bit-identical restores)
 bench-compare:
 	python benchmarks/ckpt_throughput.py --compare
+
+# CI-sized compare: bit-identity is a hard fail, timing informational
+bench-smoke:
+	python benchmarks/ckpt_throughput.py --compare --smoke
+
+# preempt->exit-85 and restore-on-new-topology latency
+bench-migration:
+	python benchmarks/migration_latency.py
+
+# run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
+run-example:
+	python examples/$(EX).py $(ARGS)

@@ -3,7 +3,6 @@ async overlap, codec ratios. (The paper reports no timings — this is the
 quantitative extension of its §2 procedure.)"""
 from __future__ import annotations
 
-import shutil
 import tempfile
 import time
 
@@ -234,8 +233,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare", action="store_true",
                     help="serial-vs-pipelined engine comparison only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-config CI mode: bit-identical restores are "
+                         "still a hard assert, but timing is informational "
+                         "only (shared runners cannot promise a speedup)")
     a = ap.parse_args()
     if a.compare:
-        bench_compare(print, strict_timing=True)
+        if a.smoke:
+            bench_compare(print, strict_timing=False, leaves=8,
+                          mb_per_leaf=2, trials=2)
+        else:
+            bench_compare(print, strict_timing=True)
     else:
         run()

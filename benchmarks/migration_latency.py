@@ -1,0 +1,115 @@
+"""Migration-path latency: how fast a preemption becomes a durable image
+(+ exit 85), and how fast an image becomes runnable state on a DIFFERENT
+topology. The two numbers future PRs must beat.
+
+  preempt_signal_to_exit85   SIGTERM -> process gone with code 85
+                             (subprocess of repro.launch.train, real signal
+                             delivery; includes finishing the in-flight step)
+  migrate_dump_durable       in-process: boundary -> image durable
+  resume_same_topology       image -> verified state, dumped fleet shape
+  resume_new_topology        image -> verified state on N/2 hosts (digest
+                             verification + topology plan + cursor remap)
+
+Run:  PYTHONPATH=src python benchmarks/migration_latency.py [--step-delay S]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def bench_signal_to_exit(emit, step_delay: float = 0.05):
+    import os
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["PYTHONUNBUFFERED"] = "1"
+    with tempfile.TemporaryDirectory() as tmp:
+        args = [sys.executable, "-m", "repro.launch.train", "--steps", "5000",
+                "--ckpt-dir", f"{tmp}/ck", "--ckpt-every", "100",
+                "--data-dir", f"{tmp}/data", "--step-delay", str(step_delay),
+                "--log-every", "1"]
+        p = subprocess.Popen(args, env=env, stdout=subprocess.PIPE, text=True)
+        for line in p.stdout:
+            if '"step"' in line:
+                break
+        t0 = time.perf_counter()
+        p.send_signal(signal.SIGTERM)
+        out = p.stdout.read()
+        p.wait(timeout=300)
+        dt = time.perf_counter() - t0
+        assert p.returncode == 85, (p.returncode, out)
+        m = re.search(r"durable in ([0-9.]+)s", out)
+        durable_s = float(m.group(1)) if m else float("nan")
+        emit(f"preempt_signal_to_exit85,{dt * 1e6:.0f},"
+             f"includes in-flight step (~{step_delay * 1e3:.0f}ms) + dump")
+        emit(f"migrate_boundary_to_durable,{durable_s * 1e6:.0f},"
+             f"drain + pipelined dump + wait")
+
+
+def bench_resume_topologies(emit, hosts: int = 4, steps: int = 2):
+    import jax
+    from repro import configs
+    from repro.core import Checkpointer, MigrationOrchestrator, resume
+    from repro.data import TokenDataset
+    from repro.models.model import LM
+    from repro.optim import OptConfig
+    from repro.training.elastic_dp import ElasticDPTrainer
+    from repro.training.train_loop import init_train_state
+
+    cfg = configs.get_tiny("qwen3-8b")
+    lm = LM(cfg)
+    opt = OptConfig(warmup_steps=2, total_steps=100)
+    with tempfile.TemporaryDirectory() as tmp:
+        ds = TokenDataset(f"{tmp}/d", vocab_size=cfg.vocab_size, seed=0)
+        t = ElasticDPTrainer(lm, opt, ds, global_batch=8, seq_len=32,
+                             hosts=hosts)
+        t.run(steps)
+        ck = Checkpointer(f"{tmp}/ck")
+        orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+        orch.handler.request("bench")
+        t0 = time.perf_counter()
+        orch.migrate(t.state, t.iters[0])
+        emit(f"migrate_inprocess,{(time.perf_counter() - t0) * 1e6:.0f},"
+             f"{hosts}-host dump with migration record")
+
+        struct = jax.eval_shape(
+            lambda: init_train_state(lm, jax.random.PRNGKey(0)))
+        for name, kw in (("same_topology", {}),
+                         ("new_topology",
+                          {"host_count": hosts // 2,
+                           "dp_degree": hosts // 2})):
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                rep = resume(f"{tmp}/ck", target_struct=struct, **kw)
+                best = min(best, time.perf_counter() - t0)
+            assert rep.digest_verified
+            note = (f"verified restore onto {rep.host_count} hosts"
+                    + (f" (changes {rep.changes})" if rep.topology_changed
+                       else " (no change)"))
+            emit(f"resume_{name},{best * 1e6:.0f},{note}")
+
+
+def run(emit=print, step_delay: float = 0.05):
+    bench_signal_to_exit(emit, step_delay)
+    bench_resume_topologies(emit)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--step-delay", type=float, default=0.05,
+                    help="artificial step time for the subprocess leg")
+    ap.add_argument("--skip-subprocess", action="store_true",
+                    help="only the in-process resume benches (fast)")
+    a = ap.parse_args()
+    if a.skip_subprocess:
+        bench_resume_topologies(print)
+    else:
+        run(print, a.step_delay)

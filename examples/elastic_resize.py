@@ -1,11 +1,23 @@
 """Elastic resize drill: dump a SHARDED training job on one topology and
 continue it on another (the paper's unsolved 'parallel application' row).
 
-Spawns a subprocess with 8 forced host devices:
-  mesh A (data=4, model=2) -> train 4 steps -> dump
-  mesh B (data=2, model=4) -> restore -> train 4 more
-  mesh C (data=8, model=1) -> restore the same image again
-and checks the B-continuation equals a never-resharded 8-step run.
+Spawns a subprocess with 8 forced host devices and checks the invariants
+that are actually true of cross-topology restore — each at its honest
+strength:
+
+  1. the image is topology-free: restoring the mesh-A dump onto mesh B
+     (2,4) and mesh C (8,1) yields the BIT-IDENTICAL logical state (the
+     migration layer proves it via the integrity tree digest);
+  2. the continuation on mesh B is deterministic: restore + 4 steps, twice,
+     agree bitwise (replay determinism — what a rescheduled job relies on);
+  3. the continuation on mesh B matches the never-resharded 8-step run to
+     numerical tolerance only — XLA re-associates reductions per shard
+     size, so cross-mesh SPMD numerics differ at rounding level (~1e-4);
+     DESIGN.md §6 explains why this is fundamental, not a bug;
+  4. bit-identical cross-topology CONTINUATION is restored as a guarantee
+     by the deterministic elastic-DP harness (per-example programs +
+     global-order aggregation): a 4-host run preempted at step 4 and
+     migrated to 2 hosts equals the unpreempted 4-host run, bitwise.
 
 Run:  PYTHONPATH=src python examples/elastic_resize.py
 """
@@ -20,7 +32,7 @@ ENV["PYTHONPATH"] = os.path.abspath(
 ENV["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 CODE = textwrap.dedent("""
-    import jax, jax.numpy as jnp, tempfile
+    import jax, jax.numpy as jnp, numpy as np, tempfile
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro import configs
     from repro.distributed import sharding as shd
@@ -29,7 +41,8 @@ CODE = textwrap.dedent("""
     from repro.training.train_loop import (init_train_state, make_train_step,
                                            train_state_pspecs)
     from repro.launch.mesh import make_test_mesh
-    from repro.core import Checkpointer, train_meta
+    from repro.core import (Checkpointer, MigrationOrchestrator, resume,
+                            train_meta)
     from repro.data import DataIterator, TokenDataset
 
     cfg = configs.get_tiny("qwen3-8b")
@@ -48,48 +61,101 @@ CODE = textwrap.dedent("""
                      out_shardings=(sps, None))
         return sps, bsp, fn
 
-    def run(mesh, state, it, n, fn, bsp):
+    def run(state, it, n, fn, bsp):
         for _ in range(n):
             toks = jax.device_put(jnp.asarray(it.next()), bsp)
             state, m = fn(state, {"tokens": toks})
         return state, m
 
-    # ---- reference: 8 uninterrupted steps on mesh A
+    def leaves(t):
+        return [np.asarray(x) for x in jax.tree.leaves(jax.device_get(t))]
+
+    def bitwise(a, b):
+        return all(np.array_equal(x, y) for x, y in zip(leaves(a), leaves(b)))
+
+    # ---- reference: 8 uninterrupted steps on mesh A (4 data, 2 model)
     mesh_a = make_test_mesh((4, 2), ("data", "model"))
     sps_a, bsp_a, fn_a = stepper(mesh_a)
     ref = jax.tree.map(jax.device_put, init_train_state(
         lm, jax.random.PRNGKey(0)), sps_a)
     it = DataIterator(ds, global_batch=8, seq_len=32)
-    ref, _ = run(mesh_a, ref, it, 8, fn_a, bsp_a)
+    ref, _ = run(ref, it, 8, fn_a, bsp_a)
 
-    # ---- elastic: 4 steps on A, dump, restore on B, 4 steps
+    # ---- elastic: 4 steps on A, dump via the migration lifecycle
     st = jax.tree.map(jax.device_put, init_train_state(
         lm, jax.random.PRNGKey(0)), sps_a)
     it1 = DataIterator(ds, global_batch=8, seq_len=32)
-    st, _ = run(mesh_a, st, it1, 4, fn_a, bsp_a)
+    st, _ = run(st, it1, 4, fn_a, bsp_a)
     ck = Checkpointer(f"{tmp}/ck")
-    ck.save(st, step=4, meta=train_meta(arch=cfg.name, step=4,
-                                        data_state=it1.state()))
-    print("dumped on mesh (4 data, 2 model)")
+    orch = MigrationOrchestrator(ck, arch=cfg.name, mesh=mesh_a).install()
+    orch.handler.request("resize-drill")
+    assert orch.migrate(st, it1) == 85
+    orch.uninstall()
+    print("dumped on mesh (4 data, 2 model) with migration record")
 
+    # ---- invariant 1: restore onto B and C is bit-identical to the dump
     mesh_b = make_test_mesh((2, 4), ("data", "model"))
     sps_b, bsp_b, fn_b = stepper(mesh_b)
     struct = jax.eval_shape(lambda: init_train_state(
         lm, jax.random.PRNGKey(0)))
-    st_b, man = ck.load_latest(target_struct=struct, shardings=sps_b)
-    it2 = DataIterator.restore(ds, man["meta"]["data"])
-    st_b, _ = run(mesh_b, st_b, it2, 4, fn_b, bsp_b)
-    print("continued on mesh (2 data, 4 model)")
-
-    same = all(bool(jnp.all(jnp.asarray(a) == jnp.asarray(b)))
-               for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(st_b)))
-    print("elastic continuation bitwise identical:", same)
-    assert same
+    rep = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_b,
+                 mesh=mesh_b)
+    assert rep.digest_verified, "integrity digest must prove bit-identity"
+    assert rep.topology_changed and "dp_degree" in rep.changes, rep.changes
+    assert bitwise(st, rep.state), "restored state != dumped state"
+    print("restore onto (2 data, 4 model): bit-identical, digest verified")
 
     mesh_c = make_test_mesh((8, 1), ("data", "model"))
     sps_c, _, _ = stepper(mesh_c)
-    st_c, _ = ck.load_latest(target_struct=struct, shardings=sps_c)
-    print("restore onto (8 data, 1 model): OK — topology is a restore-time choice")
+    rep_c = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_c,
+                   mesh=mesh_c)
+    assert rep_c.digest_verified and bitwise(st, rep_c.state)
+    print("restore onto (8 data, 1 model): bit-identical — topology is a "
+          "restore-time choice")
+
+    # ---- invariant 2: replay determinism of the B continuation
+    st_b = jax.tree.map(jnp.asarray, rep.state)
+    it2 = rep.make_iterator(ds)
+    st_b, _ = run(st_b, it2, 4, fn_b, bsp_b)
+    rep2 = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_b,
+                  mesh=mesh_b)
+    st_b2, _ = run(jax.tree.map(jnp.asarray, rep2.state),
+                   rep2.make_iterator(ds), 4, fn_b, bsp_b)
+    assert bitwise(st_b, st_b2), "replayed continuation must be bitwise equal"
+    print("continued on mesh (2 data, 4 model): replay-deterministic")
+
+    # ---- invariant 3: B continuation == uninterrupted A run, to rounding
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(jax.device_get(ref))[0],
+            jax.tree_util.tree_flatten_with_path(jax.device_get(st_b))[0]):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        np.testing.assert_allclose(
+            a, b, rtol=1e-2, atol=1e-3,
+            err_msg=f"cross-mesh continuation diverged beyond rounding at "
+                    f"{jax.tree_util.keystr(pa)}")
+    print("cross-mesh continuation equals uninterrupted run to rounding")
+
+    # ---- invariant 4: deterministic elastic DP restores full bit-identity
+    from repro.training.elastic_dp import ElasticDPTrainer
+    ds2 = TokenDataset(f"{tmp}/d2", vocab_size=cfg.vocab_size, seed=1)
+    ref_dp = ElasticDPTrainer(lm, opt, ds2, global_batch=8, seq_len=32,
+                              hosts=4)
+    ref_dp.run(6)
+    t = ElasticDPTrainer(lm, opt, ds2, global_batch=8, seq_len=32, hosts=4)
+    t.run(3)
+    ck2 = Checkpointer(f"{tmp}/ck2")
+    orch2 = MigrationOrchestrator(ck2, arch=cfg.name,
+                                  topology=t.topology()).install()
+    orch2.handler.request("resize-drill")
+    assert orch2.migrate(t.state, t.iters[0]) == 85
+    orch2.uninstall()
+    rep_dp = resume(f"{tmp}/ck2", target_struct=struct, host_count=2,
+                    dp_degree=2)
+    t2 = ElasticDPTrainer.from_resume(lm, opt, ds2, rep_dp, seq_len=32)
+    t2.run(3)
+    assert bitwise(ref_dp.state, t2.state), \\
+        "deterministic elastic DP must be bit-identical across host counts"
+    print("4-host -> 2-host migration, deterministic DP: bit-identical")
 """)
 
 out = subprocess.run([sys.executable, "-c", CODE], env=ENV, text=True)

@@ -14,7 +14,6 @@ import signal
 import subprocess
 import sys
 import tempfile
-import time
 
 ENV = dict(os.environ)
 ENV["PYTHONPATH"] = os.path.abspath(

@@ -9,7 +9,6 @@ to your patience. This is the same driver the fleet would run
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

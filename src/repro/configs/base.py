@@ -6,7 +6,6 @@ Every assigned architecture provides a ``CONFIG`` (exact published config) and a
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 
 # Block kinds understood by repro.models.model

@@ -41,6 +41,26 @@ def manifest_digest(manifest_dict: dict) -> str:
     return sha256(json.dumps(body, sort_keys=True).encode())
 
 
+def tree_digest(pairs) -> str:
+    """Logical-state digest: hash of (path, dtype, shape, bytes) over the
+    leaves in path order. Topology-free by construction — the same logical
+    values give the same digest no matter what mesh the tree lives on (or
+    lived on), which is exactly the invariant a cross-topology migration
+    must preserve. ``pairs`` is {path: array} or an iterable of
+    (path, array)."""
+    import numpy as np
+    if isinstance(pairs, dict):
+        pairs = pairs.items()
+    h = hashlib.sha256()
+    for path, arr in sorted(pairs, key=lambda kv: kv[0]):
+        a = np.asarray(arr)
+        h.update(path.encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
 class CorruptionError(RuntimeError):
     def __init__(self, image_id: str, bad_chunks: list):
         self.image_id = image_id

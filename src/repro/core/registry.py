@@ -47,6 +47,17 @@ class Registry:
         imgs = self.images()
         return imgs[-1] if imgs else None
 
+    def latest_migration(self):
+        """(image_summary, MigrationManifest) for the newest image, or
+        (None, None). The record is synthesized for pre-migration images,
+        so restart tooling can treat every catalog uniformly."""
+        from repro.core.migration import MigrationManifest
+        latest = self.latest()
+        if latest is None:
+            return None, None
+        man = read_manifest(self.tier, latest["image_id"])
+        return latest, MigrationManifest.from_image(man)
+
     def _parents_of(self, keep_ids: set) -> set:
         """delta8 chains need their parents alive. A parent *link* alone
         (plain incremental bookkeeping on a full-encode image) does not

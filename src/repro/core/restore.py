@@ -49,8 +49,12 @@ def _unflatten_paths(pairs: dict):
 
 def restore(root, image_id: str | None = None, *, target_struct=None,
             shardings=None, replicas=(), allow_env_mismatch: bool = True,
-            executor: CheckpointExecutor | None = None):
-    """Returns (tree, manifest_dict).
+            executor: CheckpointExecutor | None = None,
+            with_pairs: bool = False):
+    """Returns (tree, manifest_dict), or (tree, manifest_dict, pairs) when
+    ``with_pairs`` — the raw decoded {path: array} exactly as stored,
+    before any target-dtype cast or device placement (what the migration
+    layer digests to prove bit-identical logical state).
 
     target_struct: optional pytree of ShapeDtypeStructs — output matches its
     treedef and dtypes (checked). shardings: optional matching pytree of
@@ -95,4 +99,6 @@ def restore(root, image_id: str | None = None, *, target_struct=None,
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s),
                             tree, shardings)
+    if with_pairs:
+        return tree, man, pairs
     return tree, man

@@ -62,6 +62,23 @@ def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
     return rules
 
 
+def mesh_topology(mesh: Mesh | None) -> dict:
+    """JSON-able topology record for checkpoint manifests: axis names/sizes,
+    DP degree, device and host counts. ``None`` mesh (unsharded single-
+    process run) records the trivial topology — the migration layer treats
+    the record as informational, never as a restore requirement."""
+    if mesh is None:
+        return {"axes": [], "dp_degree": 1, "device_count": 1,
+                "host_count": 1}
+    return {
+        "axes": [[name, int(size)] for name, size in
+                 zip(mesh.axis_names, mesh.devices.shape)],
+        "dp_degree": data_size(mesh),
+        "device_count": int(mesh.devices.size),
+        "host_count": len({d.process_index for d in mesh.devices.flat}),
+    }
+
+
 def batch_axes(mesh: Mesh, global_batch: int):
     """Shard batch over (pod, data) when divisible, else replicate (bs=1
     long-context decode)."""

@@ -12,7 +12,6 @@ the exact-zero (clean block) path that drives incremental dumps.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import batch_axes
 from repro.models import kvcache
-from repro.models.model import LM
 
 
 def _sds(shape, dtype):

@@ -23,10 +23,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
-from repro.core import (Checkpointer, EXIT_CHECKPOINTED, PreemptionHandler,
+from repro.core import (Checkpointer, EXIT_CHECKPOINTED,
+                        MigrationOrchestrator, PreemptionHandler, resume,
                         train_meta)
 from repro.data import DataIterator, TokenDataset
 from repro.models.model import LM
@@ -105,19 +105,35 @@ def main(argv=None):
               f"{plan.total_bytes / 1e6:.1f} MB/image, "
               f"chunk {plan.chunk_bytes >> 20} MiB, "
               f"engine={'serial' if args.ckpt_serial else 'pipelined'}")
-    preempt = PreemptionHandler().install()
     monitor = StragglerMonitor(num_hosts=1)
+    orch = None
+    if ckpt:
+        orch = MigrationOrchestrator(ckpt, monitor=monitor, arch=cfg.name,
+                                     topology={"axes": [], "dp_degree": 1,
+                                               "device_count":
+                                               jax.device_count(),
+                                               "host_count": 1})
+        preempt = orch.install().handler
+    else:
+        preempt = PreemptionHandler().install()
 
     state = None
     start_step = 0
     if args.resume and ckpt and ckpt.registry.latest():
         struct = jax.eval_shape(
             lambda: init_train_state(lm, jax.random.PRNGKey(args.seed)))
-        state, man = ckpt.load_latest(target_struct=struct)
-        state = jax.tree.map(jnp.asarray, state)
-        start_step = man["meta"]["step"]
-        it = DataIterator.restore(ds, man["meta"]["data"])
-        print(f"[train] resumed from {man['image_id']} at step {start_step}")
+        rep = resume(ckpt.tier, target_struct=struct, host_count=1,
+                     dp_degree=1, executor=ckpt.executor)
+        state = jax.tree.map(jnp.asarray, rep.state)
+        start_step = rep.data["step"]
+        it = rep.make_iterator(ds)
+        man = rep.manifest
+        note = (f" (migrated: {rep.migration.reason}, topology change "
+                f"{rep.changes})" if rep.topology_changed
+                else (f" (migrated: {rep.migration.reason})"
+                      if rep.migration.reason else ""))
+        print(f"[train] resumed from {man['image_id']} at step "
+              f"{start_step}{note}")
     else:
         state = init_train_state(lm, jax.random.PRNGKey(args.seed))
         it = DataIterator(ds, global_batch=args.global_batch,
@@ -142,13 +158,15 @@ def main(argv=None):
     try:
         for s in range(start_step, args.steps):
             if preempt.preempt_requested():
-                print(f"[train] preemption requested at step {s}; "
+                print(f"[train] preemption ({preempt.reason}) at step {s}; "
                       f"checkpointing and exiting {EXIT_CHECKPOINTED}")
-                it.stop_prefetch()
-                save("preempt")
-                if ckpt:
-                    ckpt.wait()
-                exit_code = EXIT_CHECKPOINTED
+                if orch:
+                    exit_code = orch.migrate(state, it, opt_cfg=opt_cfg)
+                    print(f"[train] migration image durable in "
+                          f"{orch.migrate_latency_s:.3f}s")
+                else:
+                    it.stop_prefetch()
+                    exit_code = EXIT_CHECKPOINTED
                 break
             t0 = time.time()
             batch = {"tokens": jnp.asarray(it.next_prefetched())}
@@ -157,7 +175,10 @@ def main(argv=None):
             if args.step_delay:
                 time.sleep(args.step_delay)
             dt = time.time() - t0
-            monitor.observe([dt])
+            if orch:
+                orch.observe_step([dt])   # straggler advice -> escalation
+            else:
+                monitor.observe([dt])
             if (s + 1) % args.log_every == 0 or s == start_step:
                 rec = {"step": int(state["step"]),
                        "loss": float(m["loss"]),

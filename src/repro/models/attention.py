@@ -10,7 +10,6 @@ cross-checked in tests.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -151,7 +150,6 @@ def _windowed(q, k, v, window, softcap, chunk_q, q_offset):
     """Sliding-window attention: per-q-chunk dynamic_slice of a front-padded
     KV stream; static slice size (W + cq) -> real flop saving."""
     B, Sq, H, hd = q.shape
-    Skv = k.shape[1]
     cq = _chunk(Sq, chunk_q)
     nq = Sq // cq
     W = window

@@ -10,7 +10,6 @@ attention block is applied at group boundaries from the scan closure. Modes:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

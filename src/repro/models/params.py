@@ -8,7 +8,7 @@ logical-axis rules in ``repro.distributed.sharding``.
 from __future__ import annotations
 
 import hashlib
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

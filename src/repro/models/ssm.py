@@ -36,7 +36,6 @@ def causal_conv(x, w, b):
 
 def conv_step(tail, x1, w, b):
     """Single-step causal conv. tail [B,K-1,C] (past inputs), x1 [B,C]."""
-    K = w.shape[0]
     window = jnp.concatenate([tail, x1[:, None, :]], axis=1)   # [B,K,C]
     y = jnp.einsum("bkc,kc->bc", window, w) + b
     return y, window[:, 1:, :]

@@ -7,8 +7,11 @@ synchronous step (the collective waits for the last arrival). The monitor
 tracks per-host step-time EWMAs and flags hosts whose EWMA exceeds
 ``threshold`` x the fleet median; the advised actions are (1) proactive
 checkpoint (cheap, async), then (2) drop/replace the host and elastically
-restore — which repro.core supports natively (restore with N-1 hosts, same
-global batch).
+restore — an *executable* path: core.migration.MigrationOrchestrator
+.observe_step() feeds this monitor and escalates checkpoint_and_replace
+advice into a preemption request whose migration record pre-plans the
+suggested_host_count fleet, so the default restart already runs without
+the slow hosts (same global batch, remapped cursors).
 """
 from __future__ import annotations
 
@@ -54,6 +57,7 @@ class StragglerMonitor:
             return {"action": "none", "hosts": []}
         # escalate: first a proactive checkpoint, then drop persistently slow
         return {"action": "checkpoint_and_replace", "hosts": s,
+                "suggested_host_count": max(1, self.num_hosts - len(s)),
                 "expected_step_gain": max(0.0, max(self.ewma[i] for i in s)
                                           - self._median())}
 

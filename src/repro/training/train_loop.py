@@ -41,6 +41,45 @@ def train_state_pspecs(lm: LM, rules: dict):
             "step": PartitionSpec()}
 
 
+def make_per_example_step_fns(lm: LM, opt_cfg: OptConfig):
+    """Topology-invariant training kernel pair for elastic data parallelism
+    (training/elastic_dp.py): a single-example grad function plus an
+    update-apply function.
+
+    Bit-identical continuation across DP degrees is impossible with a
+    batch-sharded step — XLA compiles a different reduction tree per local
+    batch size (measured: ~5e-5 per step on the tiny config). It IS possible
+    when every example runs the *same* single-example program and the
+    gradient "all-reduce" sums per-example grads in global index order:
+    both the per-example compute and the fold are then independent of how
+    examples are partitioned over hosts. That is what migration tests pin.
+
+    grad_fn(params, tokens[S+1]) -> (loss, grads)
+    apply_fn(state, grads_sum, loss_sum, n) -> (state', metrics)
+    """
+
+    def per_example(params, tokens):
+        (loss, _metrics), grads = jax.value_and_grad(lm.loss, has_aux=True)(
+            params, {"tokens": tokens[None]})
+        return loss, grads
+
+    def apply(state, grads_sum, loss_sum, n):
+        step1 = state["step"] + 1
+        grads = jax.tree.map(lambda g: g / n, grads_sum)
+        loss = loss_sum / n
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = warmup_cosine(step1, opt_cfg.lr, opt_cfg.warmup_steps,
+                           opt_cfg.total_steps)
+        new_params, new_opt = adamw_update(grads, state["opt"],
+                                           state["params"], step1, opt_cfg,
+                                           lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return ({"params": new_params, "opt": new_opt, "step": step1},
+                metrics)
+
+    return jax.jit(per_example), jax.jit(apply)
+
+
 def make_train_step(lm: LM, opt_cfg: OptConfig, microbatches: int = 1):
     """microbatches > 1 accumulates grads over batch slices (lax.scan) —
     cuts activation-carry memory by the microbatch factor at ~zero flop cost

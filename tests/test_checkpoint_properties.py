@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) for the C/R engine's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 try:

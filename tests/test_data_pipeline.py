@@ -1,5 +1,4 @@
 """Data pipeline: determinism, open-files restore semantics, prefetch."""
-import os
 
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Error-feedback int8 gradient compression: bias cancellation + wire size."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim.compress import (compress_leaf, compress_tree,
                                   decompress_leaf, decompress_tree,

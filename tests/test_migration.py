@@ -1,0 +1,514 @@
+"""Preempt-to-migrate lifecycle: preemption deterministically produces a
+dump, and the dump restores onto a *different* topology bit-identically.
+
+The bit-identity contract uses the deterministic elastic-DP harness
+(training/elastic_dp.py): per-example programs + global-order aggregation
+make the continuation independent of the host partitioning, so a run
+preempted mid-training and resumed on fewer hosts must equal the
+unpreempted run EXACTLY — not just to tolerance. SPMD mesh numerics are
+exercised separately (examples/elastic_resize.py, tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (Checkpointer, CorruptionError, EXIT_CHECKPOINTED,
+                        MigrationManifest, MigrationOrchestrator,
+                        PreemptionHandler, resume, train_meta, tree_digest)
+from repro.data import DataIterator, TokenDataset
+from repro.models.model import LM
+from repro.optim import OptConfig
+from repro.training.elastic_dp import ElasticDPTrainer, fleet_topology
+from repro.training.fault_tolerance import StragglerMonitor
+from repro.training.train_loop import init_train_state
+
+from conftest import subprocess_env
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = configs.get_tiny("qwen3-8b")
+    return cfg, LM(cfg), OptConfig(warmup_steps=2, total_steps=100)
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory, tiny):
+    cfg, _, _ = tiny
+    root = tmp_path_factory.mktemp("tokens")
+    return TokenDataset(str(root), vocab_size=cfg.vocab_size, seed=0)
+
+
+def bitwise_equal(a, b) -> bool:
+    la = [np.asarray(x) for x in jax.tree.leaves(jax.device_get(a))]
+    lb = [np.asarray(x) for x in jax.tree.leaves(jax.device_get(b))]
+    return len(la) == len(lb) and all(
+        np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+def state_struct(lm):
+    return jax.eval_shape(lambda: init_train_state(lm, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_preempt_migrate_shrink_fleet_bit_identical(tiny, dataset, tmp_path):
+    """The acceptance contract: preempt a 4-host run mid-training, resume
+    on 2 hosts (different host count AND DP degree), reach bit-identical
+    state versus the unpreempted 4-host run at the same step."""
+    cfg, lm, opt = tiny
+    ref = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                           hosts=4)
+    ref.run(4)
+
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=4)
+    t.run(2)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name,
+                                 topology=t.topology()).install()
+    try:
+        orch.handler.request("test")
+        assert orch.should_migrate()
+        code = orch.migrate(t.state, t.iters[0], opt_cfg=opt)
+    finally:
+        orch.uninstall()
+    assert code == EXIT_CHECKPOINTED
+    assert orch.last_migration.state_digest
+    assert orch.last_migration.host_count == 4
+
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 host_count=2, dp_degree=2)
+    assert rep.topology_changed
+    assert rep.changes == {"host_count": [4, 2], "dp_degree": [4, 2]}
+    assert rep.digest_verified is True
+    assert rep.data["local_batch"] == 2
+
+    t2 = ElasticDPTrainer.from_resume(lm, opt, dataset, rep, seq_len=16)
+    assert t2.hosts == 2
+    t2.run(2)
+    assert t2.step_count == ref.step_count
+    assert bitwise_equal(ref.state, t2.state)
+
+
+def test_resume_grow_fleet_and_unchanged(tiny, dataset, tmp_path):
+    """Elasticity is symmetric (N+k hosts) and the no-change path reports
+    no topology change."""
+    cfg, lm, opt = tiny
+    ref = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                           hosts=2)
+    ref.run(3)
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    orch.handler.request("test")
+    orch.migrate(t.state, t.iters[0])
+
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 host_count=4, dp_degree=4)
+    assert rep.changes == {"host_count": [2, 4], "dp_degree": [2, 4]}
+    t_up = ElasticDPTrainer.from_resume(lm, opt, dataset, rep, seq_len=16)
+    t_up.run(2)
+    assert bitwise_equal(ref.state, t_up.state)
+
+    rep_same = resume(str(tmp_path / "ck"), target_struct=state_struct(lm))
+    assert not rep_same.topology_changed and rep_same.dp_degree == 2
+
+
+def test_resume_rejects_indivisible_dp(tiny, dataset, tmp_path):
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    orch.handler.request("test")
+    orch.migrate(t.state, t.iters[0])
+    with pytest.raises(ValueError, match="not divisible"):
+        resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+               dp_degree=3)
+
+
+def test_migrate_drains_inflight_async_dumps(tiny, dataset, tmp_path):
+    """A preemption arriving while async dumps are in flight must commit
+    them (they are the incremental ancestors) before the final image."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    t.run(1)
+    ck.save_async(t.state, step=t.step_count,
+                  meta=train_meta(arch=cfg.name, step=t.step_count,
+                                  data_state=t.data_state()))
+    t.run(1)
+    orch.handler.request("test")
+    orch.migrate(t.state, t.iters[0])
+    imgs = ck.registry.images()
+    assert [m["step"] for m in imgs] == [1, 2]
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm))
+    assert rep.data["step"] == 2
+    assert bitwise_equal(rep.state, t.state)
+
+
+def test_resume_digest_mismatch_raises(tiny, dataset, tmp_path):
+    """The integrity layer must refuse a restore whose logical bytes do not
+    match what the dump recorded (here: a deliberately wrong digest)."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=1)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    rec = MigrationManifest(step=1, arch=cfg.name, host_count=1, dp_degree=1,
+                            data=t.data_state(),
+                            state_digest="0" * 64)
+    meta = train_meta(arch=cfg.name, step=1, data_state=t.data_state())
+    meta["migration"] = rec.to_meta()
+    ck.save(t.state, step=1, meta=meta)
+    with pytest.raises(CorruptionError, match="state digest"):
+        resume(str(tmp_path / "ck"), target_struct=state_struct(lm))
+    # verification is opt-out-able for forensics
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 verify_digest=False)
+    assert rep.digest_verified is None
+
+
+def test_resume_adopts_pre_migration_images(tiny, dataset, tmp_path):
+    """Images dumped before the migration layer existed (no migration
+    record) resume fine: the record is synthesized from topology/meta."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(t.state, step=1,
+            meta=train_meta(arch=cfg.name, step=1, data_state=t.data_state()),
+            topology=fleet_topology(2))
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 host_count=1, dp_degree=1)
+    assert rep.digest_verified is None      # nothing recorded to verify
+    assert rep.migration.host_count == 2    # synthesized from topology
+    assert rep.changes["host_count"] == [2, 1]
+    t1 = ElasticDPTrainer.from_resume(lm, opt, dataset, rep, seq_len=16)
+    assert bitwise_equal(t1.state, t.state)
+
+
+def test_cursor_remap_replays_identical_global_stream(dataset):
+    """Same global batch, different DP partitioning -> same global tokens
+    (the data half of elastic restore)."""
+    its4 = [DataIterator(dataset, global_batch=8, seq_len=16, dp_rank=r,
+                         dp_size=4, step=3) for r in range(4)]
+    its2 = [DataIterator(dataset, global_batch=8, seq_len=16, dp_rank=r,
+                         dp_size=2, step=3) for r in range(2)]
+    g4 = np.concatenate([it.next() for it in its4])
+    g2 = np.concatenate([it.next() for it in its2])
+    assert np.array_equal(g4, g2)
+
+
+def test_resume_with_new_global_batch_keeps_token_offset(tiny, dataset,
+                                                         tmp_path):
+    """Changing the global batch on resume must remap the step-addressed
+    cursor so the run continues at the same token offset — not replay or
+    skip data — and must refuse offsets that don't align."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    t.run(2)                                    # 8 sequences consumed
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    orch.handler.request("test")
+    orch.migrate(t.state, t.iters[0])
+
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 dp_degree=1, global_batch=8)
+    assert rep.data["step"] == 1                # 8 consumed / new gb 8
+    it = rep.make_iterator(dataset)
+    want = np.concatenate([DataIterator(dataset, global_batch=4, seq_len=16,
+                                        dp_rank=r, dp_size=2,
+                                        step=2).next() for r in range(2)])
+    got = it.next()[:4]                         # first half of the gb=8 batch
+    assert np.array_equal(got, want)            # same token offset
+
+    with pytest.raises(ValueError, match="token offset"):
+        resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+               dp_degree=1, global_batch=3)     # 8 % 3 != 0
+
+
+def test_make_iterator_defaults_to_full_global_batch(tiny, dataset,
+                                                     tmp_path):
+    """A single-process SPMD resume must feed the FULL global batch even
+    when the new mesh has dp_degree > 1 — dp_rank/dp_size describe the
+    data-feeding processes, not the mesh partitioning."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=8, seq_len=16,
+                         hosts=4)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    orch.handler.request("test")
+    orch.migrate(t.state, t.iters[0])
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 host_count=2, dp_degree=2)
+    assert rep.make_iterator(dataset).next().shape[0] == 8   # full batch
+    assert rep.make_iterator(dataset, dp_rank=1,
+                             dp_size=2).next().shape[0] == 4  # explicit slice
+
+
+def test_migrate_with_lossy_codec_resumes_without_digest(tiny, dataset,
+                                                         tmp_path):
+    """A lossy codec policy breaks dump-bytes == restore-bytes by design;
+    the migration must omit the digest rather than fail every resume."""
+    from repro.core.compression import default_policy
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=2)
+    t.run(1)
+    ck = Checkpointer(str(tmp_path / "ck"),
+                      codec_policy=default_policy(lossy_optimizer=True))
+    ck.save(t.state, step=1,
+            meta=train_meta(arch=cfg.name, step=1,
+                            data_state=t.data_state()))   # delta8 parent
+    t.run(1)
+    orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
+    orch.handler.request("test")
+    assert orch.migrate(t.state, t.iters[0]) == EXIT_CHECKPOINTED
+    assert orch.last_migration.state_digest is None
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm),
+                 host_count=1, dp_degree=1)
+    assert rep.digest_verified is None          # nothing recorded to verify
+    assert rep.data["step"] == 2
+
+
+def test_straggler_plan_preserves_model_parallel_factor(tiny, tmp_path):
+    """planned_dp_degree scales the dumped dp with the surviving devices,
+    never folding the model-parallel factor into DP."""
+    cfg, lm, opt = tiny
+    ck = Checkpointer(str(tmp_path / "ck"))
+    mon = StragglerMonitor(num_hosts=4, warmup_steps=1, threshold=1.5)
+    # 4 hosts x 2 devices = 8 devices as dp=4 x mp=2
+    topo = {"axes": [["data", 4], ["model", 2]], "dp_degree": 4,
+            "device_count": 8, "host_count": 4}
+    orch = MigrationOrchestrator(ck, monitor=mon, topology=topo)
+    for _ in range(2):
+        orch.observe_step([0.1, 0.1, 0.1, 0.9])
+    assert orch.planned_host_count == 3
+    assert orch.planned_dp_degree == 3          # 6 devices / mp=2
+
+    # an mp factor that cannot divide the surviving devices -> no plan
+    ck2 = Checkpointer(str(tmp_path / "ck2"))
+    mon2 = StragglerMonitor(num_hosts=4, warmup_steps=1, threshold=1.5)
+    topo2 = {"axes": [["data", 2], ["model", 2]], "dp_degree": 2,
+             "device_count": 4, "host_count": 4}
+    orch2 = MigrationOrchestrator(ck2, monitor=mon2, topology=topo2)
+    for _ in range(2):
+        orch2.observe_step([0.1, 0.1, 0.1, 0.9])
+    assert orch2.planned_host_count == 3
+    assert orch2.planned_dp_degree is None      # 3 devices % mp=2 != 0
+
+
+def test_resume_image_without_data_pipeline(tiny, tmp_path):
+    """Images with no data cursor (serving sessions, bare state dumps)
+    still resume: there is nothing to remap, only the step carries."""
+    cfg, lm, opt = tiny
+    state = init_train_state(lm, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(state, step=0, meta={"job_kind": "serve", "arch": cfg.name})
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm))
+    assert rep.data["global_batch"] is None
+    assert bitwise_equal(rep.state, state)
+
+
+# ------------------------------------------------------- PreemptionHandler
+def test_signal_mid_step_defers_dump_to_boundary(tiny, dataset, tmp_path):
+    """A signal landing mid-step must only set the flag; the dump happens
+    at the next boundary — never from inside the signal handler."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=1)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    orch = MigrationOrchestrator(ck, arch=cfg.name,
+                                 topology=t.topology()).install()
+    try:
+        t.run(1)
+        os.kill(os.getpid(), signal.SIGUSR2)      # "mid-step"
+        t.run(1)                                  # step completes untouched
+        assert ck.registry.images() == []         # no dump yet
+        assert orch.should_migrate()
+        assert orch.handler.reason == "SIGUSR2"
+        code = orch.migrate(t.state, t.iters[0])  # boundary: now it dumps
+    finally:
+        orch.uninstall()
+    assert code == EXIT_CHECKPOINTED
+    imgs = ck.registry.images()
+    assert len(imgs) == 1 and imgs[0]["step"] == 2
+    _, rec = ck.registry.latest_migration()
+    assert rec.reason == "SIGUSR2" and rec.data["step"] == 2
+
+
+def test_straggler_advice_escalates_to_preemption(tiny, dataset, tmp_path):
+    """StragglerMonitor advice becomes an executable path: observe_step
+    escalates checkpoint_and_replace into handler.request('straggler') and
+    the migration record pre-plans the shrunken fleet, which resume() then
+    uses as the default topology."""
+    cfg, lm, opt = tiny
+    t = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                         hosts=4)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    mon = StragglerMonitor(num_hosts=4, warmup_steps=2, threshold=1.5)
+    orch = MigrationOrchestrator(ck, monitor=mon, arch=cfg.name,
+                                 topology=t.topology())
+    advice = {"action": "none"}
+    for _ in range(4):
+        t.run(1)
+        advice = orch.observe_step([0.1, 0.1, 0.1, 0.5])  # host 3 is slow
+    assert advice["action"] == "checkpoint_and_replace"
+    assert advice["hosts"] == [3]
+    assert advice["suggested_host_count"] == 3
+    assert orch.handler.preempt_requested()
+    assert orch.handler.reason == "straggler"
+    orch.migrate(t.state, t.iters[0])
+    rec = orch.last_migration
+    assert rec.planned_host_count == 3 and rec.hosts_dropped == [3]
+    # global_batch=4 is not divisible by 3 -> no dp plan recorded, resume
+    # keeps the dumped dp degree but restarts on the planned host count
+    assert rec.planned_dp_degree is None
+    rep = resume(str(tmp_path / "ck"), target_struct=state_struct(lm))
+    assert rep.host_count == 3 and rep.dp_degree == 4
+    assert rep.changes["host_count"] == [4, 3]
+
+    # a divisible fleet records the dp plan too
+    t2 = ElasticDPTrainer(lm, opt, dataset, global_batch=4, seq_len=16,
+                          hosts=4)
+    ck2 = Checkpointer(str(tmp_path / "ck2"))
+    mon2 = StragglerMonitor(num_hosts=4, warmup_steps=2, threshold=1.5)
+    orch2 = MigrationOrchestrator(ck2, monitor=mon2, arch=cfg.name,
+                                  topology=t2.topology())
+    for _ in range(4):
+        t2.run(1)
+        orch2.observe_step([0.1, 0.1, 0.5, 0.5])  # two slow hosts
+    orch2.migrate(t2.state, t2.iters[0])
+    assert orch2.last_migration.planned_host_count == 2
+    assert orch2.last_migration.planned_dp_degree == 2
+    rep2 = resume(str(tmp_path / "ck2"), target_struct=state_struct(lm))
+    assert rep2.host_count == 2 and rep2.dp_degree == 2
+    t3 = ElasticDPTrainer.from_resume(lm, opt, dataset, rep2, seq_len=16)
+    assert t3.hosts == 2
+
+
+def test_escalation_fires_once(tiny, dataset, tmp_path):
+    cfg, lm, opt = tiny
+    ck = Checkpointer(str(tmp_path / "ck"))
+    mon = StragglerMonitor(num_hosts=2, warmup_steps=1, threshold=1.2)
+    orch = MigrationOrchestrator(ck, monitor=mon, topology=fleet_topology(2))
+    for _ in range(3):
+        orch.observe_step([0.1, 1.0])
+    assert orch.handler.trigger_count == 1      # no re-request spam
+
+
+def test_uninstall_restores_original_dispositions():
+    seen = []
+
+    def custom(signum, frame):
+        seen.append(signum)
+
+    old_usr2 = signal.signal(signal.SIGUSR2, custom)
+    try:
+        h = PreemptionHandler(signals=(signal.SIGUSR2,)).install()
+        assert signal.getsignal(signal.SIGUSR2) == h._on_signal
+        os.kill(os.getpid(), signal.SIGUSR2)
+        assert h.preempt_requested() and seen == []
+        h.uninstall()
+        assert signal.getsignal(signal.SIGUSR2) is custom
+        os.kill(os.getpid(), signal.SIGUSR2)
+        time.sleep(0.01)
+        assert seen == [signal.SIGUSR2]         # original handler back live
+        assert h.trigger_count == 1
+    finally:
+        signal.signal(signal.SIGUSR2, old_usr2)
+
+
+def test_handler_clear_and_first_reason_wins():
+    h = PreemptionHandler(signals=())
+    h.request("straggler")
+    h.request("manual")
+    assert h.reason == "straggler" and h.trigger_count == 2
+    assert h.requested_at is not None
+    h.clear()
+    assert not h.preempt_requested() and h.reason is None
+    h.request("manual")
+    assert h.reason == "manual"
+
+
+# ----------------------------------------------------------- record format
+def test_migration_manifest_roundtrip():
+    rec = MigrationManifest(step=7, arch="qwen3-8b", host_count=4,
+                            dp_degree=4, mesh_axes=[["data", 4]],
+                            global_batch=8,
+                            data={"step": 7, "global_batch": 8},
+                            rng=[0, 1], state_digest="ab" * 32,
+                            reason="SIGTERM", planned_host_count=3,
+                            hosts_dropped=[2])
+    meta = rec.to_meta()
+    assert meta["version"] == 1
+    import json
+    assert json.loads(json.dumps(meta)) == meta     # JSON-able
+    back = MigrationManifest.from_meta(meta)
+    assert back == rec
+    # unknown fields from future versions are ignored, not fatal
+    meta["future_field"] = True
+    assert MigrationManifest.from_meta(meta) == rec
+
+
+def test_tree_digest_is_topology_free_and_sensitive():
+    a = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+         "step": np.int32(3)}
+    pairs = [("w", a["w"]), ("step", a["step"])]
+    d1 = tree_digest(dict(pairs))
+    d2 = tree_digest(reversed(pairs))           # order-insensitive input
+    assert d1 == d2
+    b = {"w": a["w"].copy(), "step": np.int32(3)}
+    b["w"][0, 0] += 1e-7
+    assert tree_digest(b) != d1                 # value-sensitive
+    c = {"w": a["w"].astype(np.float64), "step": np.int32(3)}
+    assert tree_digest(c) != d1                 # dtype-sensitive
+
+
+# ------------------------------------------------------- exit-85 contract
+@pytest.mark.slow
+def test_launcher_sigterm_exits_85_and_resumes(tmp_path):
+    """End-to-end: SIGTERM mid-run -> image + exit 85; --resume continues
+    from the migrated image on the 'new machine' (fresh process)."""
+    env = subprocess_env()
+    args = [sys.executable, "-m", "repro.launch.train", "--steps", "500",
+            "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "50",
+            "--data-dir", str(tmp_path / "data"), "--step-delay", "0.02",
+            "--log-every", "1"]
+    p = subprocess.Popen(args, env=env, stdout=subprocess.PIPE, text=True)
+    saw_step = False
+    deadline = time.time() + 120
+    for line in p.stdout:
+        if '"step"' in line:
+            saw_step = True
+            break
+        if time.time() > deadline:
+            break
+    assert saw_step, "launcher never reached a training step"
+    p.send_signal(signal.SIGTERM)
+    out = p.stdout.read()
+    p.wait(timeout=120)
+    assert p.returncode == EXIT_CHECKPOINTED, out
+    assert "preemption (SIGTERM)" in out and "migration image durable" in out
+
+    r = subprocess.run(args[:4] + ["5"] + args[5:] + ["--resume"], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "resumed from" in r.stdout and "migrated: SIGTERM" in r.stdout

@@ -1,7 +1,6 @@
 """MoE dispatch: scatter path vs dense oracle, capacity behavior, aux loss."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import configs
 from repro.models.moe import (capacity, moe_apply, moe_dense_reference,

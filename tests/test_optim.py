@@ -1,5 +1,4 @@
 """Optimizer vs independent numpy reference; clipping; schedule."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

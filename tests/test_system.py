@@ -2,7 +2,6 @@
 arbitrary step, restore, continue) with bitwise-deterministic verification,
 plus node-failure (SIGKILL) recovery via subprocess drills."""
 import json
-import os
 import signal
 import subprocess
 import sys
@@ -10,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import subprocess_env
@@ -89,7 +87,8 @@ def test_preemption_checkpoints_and_exits_85(tmp_path, sig, expect_code):
     proc.send_signal(sig)
     out, _ = proc.communicate(timeout=240)
     assert proc.returncode == expect_code, out[-2000:]
-    assert "preemption requested" in out
+    assert "preemption (" in out          # names the signal that triggered it
+    assert "migration image durable" in out
 
     # image exists and is resumable
     from repro.core import Registry
