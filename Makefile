@@ -1,11 +1,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test lint bench-compare bench-smoke bench-migration run-example
+.PHONY: check test lint api-check bench-compare bench-smoke bench-facade \
+	bench-migration run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
 	bash scripts/smoke.sh
+
+# public-surface gate: the repro.api snapshot test (names, dataclass
+# fields, session signatures) + a warning-free import of the façade
+api-check:
+	python -m pytest -q tests/test_api_surface.py
+	python -W error::DeprecationWarning -c "import repro.api, repro.core"
 
 # full tier-1 suite (~8 min)
 test:
@@ -22,6 +29,11 @@ bench-compare:
 # CI-sized compare: bit-identity is a hard fail, timing informational
 bench-smoke:
 	python benchmarks/ckpt_throughput.py --compare --smoke
+
+# service-façade overhead: typed session requests must add <5% vs direct
+# legacy Checkpointer calls (same engine underneath)
+bench-facade:
+	python benchmarks/ckpt_throughput.py --facade
 
 # preempt->exit-85 and restore-on-new-topology latency
 bench-migration:

@@ -219,6 +219,69 @@ def bench_compare(emit, leaves=24, mb_per_leaf=4, chunk_mb=1,
     return speed
 
 
+def bench_facade(emit, mb=64, saves=4, trials=3, strict_overhead=True,
+                 max_overhead=0.05):
+    """repro.api service façade vs direct legacy Checkpointer calls.
+
+    Both paths run the SAME engine (the facade is typed requests over a
+    CheckpointSession; the legacy Checkpointer is a shim over one), so the
+    request layer must be free: asserts the façade adds < ``max_overhead``
+    (5%) on a sync dump loop, and that both paths produce identical dump
+    accounting. Timings are best-of-``trials`` with the paths alternated
+    (page-cache noise otherwise dwarfs the dataclass cost being measured)."""
+    import warnings
+    from repro.api import (CheckpointSession, DumpRequest, RestoreRequest,
+                           RetentionPolicy, SessionConfig)
+    from repro.core import Checkpointer
+
+    tree = synth_state(mb)
+    jax.block_until_ready(tree)
+
+    def loop_direct(tmp):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ck = Checkpointer(tmp, keep_last=saves + 1)
+        t0 = time.perf_counter()
+        outs = [ck.save(tree, step=s) for s in range(1, saves + 1)]
+        dt = time.perf_counter() - t0
+        ck.load_latest()
+        return dt, outs[0]["stats"]
+
+    def loop_facade(tmp):
+        sess = CheckpointSession(SessionConfig(
+            root=tmp, retention=RetentionPolicy(keep_last=saves + 1)))
+        t0 = time.perf_counter()
+        receipts = [sess.dump(DumpRequest(state=tree, step=s))
+                    for s in range(1, saves + 1)]
+        dt = time.perf_counter() - t0
+        sess.restore(RestoreRequest(verify_digest=False))
+        return dt, receipts[0].stats
+
+    best = {}
+    for _ in range(trials):
+        for name, loop in (("direct", loop_direct), ("facade", loop_facade)):
+            with tempfile.TemporaryDirectory() as tmp:
+                dt, stats = loop(tmp)
+            if name not in best or dt < best[name][0]:
+                best[name] = (dt, stats)
+    (dt_d, stats_d), (dt_f, stats_f) = best["direct"], best["facade"]
+    assert stats_d == stats_f, ("façade changed dump accounting",
+                                stats_d, stats_f)
+    overhead = dt_f / dt_d - 1.0
+    emit(f"ckpt_facade_direct,{dt_d * 1e6:.0f},"
+         f"{saves}x{mb}MB sync saves via legacy Checkpointer")
+    emit(f"ckpt_facade_session,{dt_f * 1e6:.0f},"
+         f"same via CheckpointSession.dump(DumpRequest)")
+    emit(f"ckpt_facade_overhead,{overhead * 1e4:.0f},"
+         f"{overhead * 100:+.2f}% (budget +{max_overhead * 100:.0f}%)")
+    if strict_overhead:
+        assert overhead < max_overhead, \
+            f"façade overhead {overhead * 100:.2f}% exceeds " \
+            f"{max_overhead * 100:.0f}% budget " \
+            f"({dt_d * 1e3:.0f}ms -> {dt_f * 1e3:.0f}ms)"
+    return overhead
+
+
 def run(emit=print):
     bench_full_dump_restore(emit)
     bench_incremental(emit)
@@ -226,6 +289,7 @@ def run(emit=print):
     bench_codecs(emit)
     bench_fsync_modes(emit)
     bench_compare(emit)
+    bench_facade(emit)
 
 
 if __name__ == "__main__":
@@ -233,10 +297,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare", action="store_true",
                     help="serial-vs-pipelined engine comparison only")
+    ap.add_argument("--facade", action="store_true",
+                    help="session-façade-vs-direct overhead check only "
+                         "(asserts <5%% on the sync dump loop)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small-config CI mode: bit-identical restores are "
-                         "still a hard assert, but timing is informational "
-                         "only (shared runners cannot promise a speedup)")
+                    help="small-config CI mode: bit-identical restores and "
+                         "dump accounting are still hard asserts, but "
+                         "timing is informational only (shared runners "
+                         "cannot promise stable timings)")
     a = ap.parse_args()
     if a.compare:
         if a.smoke:
@@ -244,5 +312,11 @@ if __name__ == "__main__":
                           mb_per_leaf=2, trials=2)
         else:
             bench_compare(print, strict_timing=True)
+    elif a.facade:
+        if a.smoke:
+            bench_facade(print, mb=16, saves=2, trials=2,
+                         strict_overhead=False)
+        else:
+            bench_facade(print)
     else:
         run()

@@ -56,7 +56,8 @@ def bench_signal_to_exit(emit, step_delay: float = 0.05):
 def bench_resume_topologies(emit, hosts: int = 4, steps: int = 2):
     import jax
     from repro import configs
-    from repro.core import Checkpointer, MigrationOrchestrator, resume
+    from repro.api import (CheckpointSession, MigrateRequest,
+                           MigrationPolicy, RestoreRequest, SessionConfig)
     from repro.data import TokenDataset
     from repro.models.model import LM
     from repro.optim import OptConfig
@@ -71,13 +72,16 @@ def bench_resume_topologies(emit, hosts: int = 4, steps: int = 2):
         t = ElasticDPTrainer(lm, opt, ds, global_batch=8, seq_len=32,
                              hosts=hosts)
         t.run(steps)
-        ck = Checkpointer(f"{tmp}/ck")
-        orch = MigrationOrchestrator(ck, arch=cfg.name, topology=t.topology())
-        orch.handler.request("bench")
+        sess = CheckpointSession(SessionConfig(
+            root=f"file://{tmp}/ck",
+            migration=MigrationPolicy(arch=cfg.name, topology=t.topology())))
         t0 = time.perf_counter()
-        orch.migrate(t.state, t.iters[0])
+        ticket = sess.migrate(MigrateRequest(state=t.state,
+                                             iterator=t.iters[0],
+                                             reason="bench"))
         emit(f"migrate_inprocess,{(time.perf_counter() - t0) * 1e6:.0f},"
-             f"{hosts}-host dump with migration record")
+             f"{hosts}-host dump with migration record "
+             f"(ticket {ticket.image_id})")
 
         struct = jax.eval_shape(
             lambda: init_train_state(lm, jax.random.PRNGKey(0)))
@@ -88,7 +92,8 @@ def bench_resume_topologies(emit, hosts: int = 4, steps: int = 2):
             best = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
-                rep = resume(f"{tmp}/ck", target_struct=struct, **kw)
+                rep = sess.restore(RestoreRequest(target_struct=struct,
+                                                  **kw))
                 best = min(best, time.perf_counter() - t0)
             assert rep.digest_verified
             note = (f"verified restore onto {rep.host_count} hosts"

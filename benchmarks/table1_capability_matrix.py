@@ -1,9 +1,14 @@
-"""Paper Table 1 reproduction: run the JAX-framework analogue of each CRIU
-use case and report Working / Not-working next to the paper's result.
+"""Paper Table 1 reproduction, driven by the `criu check` analogue.
 
-The paper's procedure was dump -> restore -> inspect; each row below executes
-exactly that with the strongest available oracle (bitwise continuation where
-meaningful)."""
+The row list — which use cases exist, what CRIU achieved on each — lives in
+ONE place: repro.api.capabilities (TABLE1 + the per-row Capability probes).
+This benchmark iterates capabilities().table1_rows() and, for every row,
+runs the heavy exercise registered for that capability name (dump ->
+restore -> inspect with the strongest available oracle, bitwise
+continuation where meaningful). A row is "Working" only if BOTH the cheap
+environment probe and the full exercise pass; a Table-1 row without an
+exercise here is a hard error, so the probe surface and the reproduction
+matrix cannot drift apart."""
 from __future__ import annotations
 
 import os
@@ -16,27 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import (Checkpointer, MemoryTier, PreemptionHandler,
-                        restore, train_meta)
+from repro.api import CheckpointSession, capabilities
+from repro.core import PreemptionHandler, restore, train_meta
 from repro.core.storage import LocalDirTier
 from repro.data import DataIterator, TokenDataset
 from repro.models import LM
 from repro.optim import OptConfig
 from repro.serving import ServeEngine
 from repro.training.train_loop import init_train_state, make_train_step
-
-PAPER = {  # paper Table 1 (CRIU 3.17.1 == non-root branch for all rows)
-    1: ("Simple serial application", "Working"),
-    2: ("Pthreading and forking", "Working"),
-    3: ("Applications with open files", "Working"),
-    4: ("Applications running in containers", "Partially working"),
-    5: ("Checkpointing inside a container runtime", "Not working"),
-    6: ("CPU-specific optimizations", "Working (same CPU family only)"),
-    7: ("Applications using GPUs", "Not working"),
-    8: ("Network applications", "Partially working"),
-    9: ("Network file system", "Working"),
-    10: ("Parallel application (MPI)", "Not working"),
-}
 
 
 def _env():
@@ -58,18 +50,18 @@ def _bitwise(a, b):
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def row1_simple_serial(tmp):
+def serial_dump_restore(tmp):
     cfg, lm, step = _env()
     ds = TokenDataset(f"{tmp}/d1", vocab_size=cfg.vocab_size, seed=1)
     ref, _ = _train(lm, step, init_train_state(lm, jax.random.PRNGKey(0)),
                     DataIterator(ds, global_batch=2, seq_len=32), 6)
     st, _ = _train(lm, step, init_train_state(lm, jax.random.PRNGKey(0)),
                    DataIterator(ds, global_batch=2, seq_len=32), 4)
-    ck = Checkpointer(f"{tmp}/ck1")
+    sess = CheckpointSession(f"file://{tmp}/ck1")
     it = DataIterator(ds, global_batch=2, seq_len=32, step=4)
-    ck.save(st, step=4, meta=train_meta(arch=cfg.name, step=4,
-                                        data_state=it.state()))
-    got, man = ck.load_latest(target_struct=jax.eval_shape(
+    sess.save(st, step=4, meta=train_meta(arch=cfg.name, step=4,
+                                          data_state=it.state()))
+    got, man = sess.load_latest(target_struct=jax.eval_shape(
         lambda: init_train_state(lm, jax.random.PRNGKey(0))))
     got = jax.tree.map(jnp.asarray, got)
     it2 = DataIterator.restore(ds, man["meta"]["data"])
@@ -78,7 +70,7 @@ def row1_simple_serial(tmp):
     return "bitwise-identical continuation after dump/restore"
 
 
-def row2_threads(tmp):
+def threaded_dump(tmp):
     cfg, lm, step = _env()
     ds = TokenDataset(f"{tmp}/d2", vocab_size=cfg.vocab_size, seed=2)
     it = DataIterator(ds, global_batch=2, seq_len=32)
@@ -86,19 +78,19 @@ def row2_threads(tmp):
     st = init_train_state(lm, jax.random.PRNGKey(0))
     for _ in range(3):
         st, _ = step(st, {"tokens": jnp.asarray(it.next_prefetched())})
-    ck = Checkpointer(f"{tmp}/ck2")
-    ck.save_async(st, step=3, meta=train_meta(   # async writer thread
+    sess = CheckpointSession(f"file://{tmp}/ck2")
+    sess.save_async(st, step=3, meta=train_meta(  # async writer thread
         arch=cfg.name, step=3, data_state=it.state()))
-    ck.wait()
+    sess.wait()
     it.stop_prefetch()                       # quiesce = state is step-only
-    got, man = ck.load_latest(target_struct=jax.eval_shape(
+    got, man = sess.load_latest(target_struct=jax.eval_shape(
         lambda: init_train_state(lm, jax.random.PRNGKey(0))))
     assert _bitwise(st, jax.tree.map(jnp.asarray, got))
     assert man["meta"]["data"]["step"] == 3
     return "dump with live prefetch+writer threads; quiesce at step boundary"
 
 
-def row3_open_files(tmp):
+def open_file_cursors(tmp):
     cfg, lm, step = _env()
     ds = TokenDataset(f"{tmp}/d3", vocab_size=cfg.vocab_size, seed=3)
     it = DataIterator(ds, global_batch=2, seq_len=32)
@@ -113,39 +105,38 @@ def row3_open_files(tmp):
     return "file cursors restored; path-independent (beyond CRIU's same-tree rule)"
 
 
-def row4_containers(tmp):
+def env_fingerprint_portability(tmp):
     cfg, lm, step = _env()
     st = init_train_state(lm, jax.random.PRNGKey(0))
     fake = {"jax": "0.0.0-containerA", "backend": "tpu", "device_count": 256,
             "python": "3.11.0", "machine": "aarch64"}
     with mock.patch("repro.core.manifest.env_fingerprint", return_value=fake):
-        ck = Checkpointer(f"{tmp}/ck4")
-        ck.save(st, step=1)
+        CheckpointSession(f"file://{tmp}/ck4").save(st, step=1)
     got, man = restore(f"{tmp}/ck4", allow_env_mismatch=True)
     assert man["env"] == fake
     assert _bitwise(st, jax.tree.map(jnp.asarray, got))
     return "image from a different env fingerprint restores cleanly (recorded, not required)"
 
 
-def row5_self_checkpoint(tmp):
+def self_checkpoint(tmp):
     cfg, lm, step = _env()
     st = init_train_state(lm, jax.random.PRNGKey(0))
     with PreemptionHandler() as h:
         h.request()                       # runtime-internal trigger
         assert h.preempt_requested()
-        ck = Checkpointer(f"{tmp}/ck5")
-        ck.save(st, step=1)               # the job dumps ITSELF
-    got, _ = ck.load_latest()
+        sess = CheckpointSession(f"file://{tmp}/ck5")
+        sess.save(st, step=1)             # the job dumps ITSELF
+    got, _ = sess.load_latest()
     assert _bitwise(st, jax.tree.map(jnp.asarray, got))
     return "job checkpoints itself — no outside dumper agent (apptainer gap closed)"
 
 
-def row6_cpu_specific(tmp):
+def backend_retarget(tmp):
     cfg, lm, _ = _env()
     st = init_train_state(lm, jax.random.PRNGKey(0))
-    ck = Checkpointer(f"{tmp}/ck6")
-    ck.save(st, step=1)
-    got, man = ck.load_latest()
+    sess = CheckpointSession(f"file://{tmp}/ck6")
+    sess.save(st, step=1)
+    got, man = sess.load_latest()
     got = jax.tree.map(jnp.asarray, got)
     # restore re-lowers for the current backend: fresh jit, fresh compile
     step2 = jax.jit(make_train_step(lm, OptConfig()))
@@ -156,19 +147,19 @@ def row6_cpu_specific(tmp):
     return "state is abstract; restore recompiles for the target backend"
 
 
-def row7_accelerators(tmp):
+def device_state_capture(tmp):
     cfg, lm, _ = _env()
     st = init_train_state(lm, jax.random.PRNGKey(0))
     assert all(isinstance(x, jax.Array) for x in jax.tree.leaves(st))
-    ck = Checkpointer(f"{tmp}/ck7")
-    ck.save(st, step=1)                    # device buffers ARE the state
-    got, _ = ck.load_latest()
+    sess = CheckpointSession(f"file://{tmp}/ck7")
+    sess.save(st, step=1)                  # device buffers ARE the state
+    got, _ = sess.load_latest()
     got = jax.tree.map(jnp.asarray, got)   # device_put on restore
     assert _bitwise(st, got)
     return "device arrays captured via device_get; CRIU's hardest gap closed at framework level"
 
 
-def row8_network_serving(tmp):
+def serving_session_migration(tmp):
     cfg = configs.get_tiny("gemma2-2b")
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
@@ -180,31 +171,30 @@ def row8_network_serving(tmp):
     eng2 = ServeEngine(lm, params, max_len=32, donate_cache=False)
     eng2.submit(prompts)
     eng2.generate(5)
-    ck = Checkpointer(f"{tmp}/ck8")
-    ck.save(eng2.session_state(), step=5)
-    state, _ = ck.load_latest()
+    sess = CheckpointSession(f"file://{tmp}/ck8")
+    eng2.checkpoint(sess, arch=cfg.name)
     eng3 = ServeEngine(lm, params, max_len=32, donate_cache=False)
-    eng3.restore_session(jax.tree.map(jnp.asarray, state))
+    eng3.resume_from(sess)
     assert np.array_equal(eng3.generate(12), ref)
     return "in-flight serving session migrated across engines, bitwise output"
 
 
-def row9_network_fs(tmp):
+def replica_repair(tmp):
     cfg, lm, _ = _env()
     st = init_train_state(lm, jax.random.PRNGKey(0))
     remote = LocalDirTier(f"{tmp}/remote_fs", write_latency_s=0.001)
-    ck = Checkpointer(f"{tmp}/ck9", replicas=[remote])
-    ck.save(st, step=1)
+    sess = CheckpointSession(f"file://{tmp}/ck9", replicas=(remote,))
+    sess.save(st, step=1)
     # corrupt local, restore via replica repair
     import glob
     victim = glob.glob(f"{tmp}/ck9/chunks/*.bin")[0]
     open(victim, "wb").write(b"bitrot")
-    got, _ = ck.load_latest()
+    got, _ = sess.load_latest()
     assert _bitwise(st, jax.tree.map(jnp.asarray, got))
     return "remote-FS replica tier + integrity verification + bitrot repair"
 
 
-def row10_parallel(tmp):
+def cross_topology_restore(tmp):
     """Distributed (the MPI row): subprocess with 8 devices — dump sharded
     on mesh (4,2), restore on (2,4) and (8,1)."""
     import subprocess, sys, textwrap
@@ -221,7 +211,7 @@ def row10_parallel(tmp):
         from repro.models.model import LM
         from repro.training.train_loop import init_train_state, train_state_pspecs
         from repro.launch.mesh import make_test_mesh
-        from repro.core import Checkpointer
+        from repro.api import CheckpointSession
         cfg = configs.get_tiny("qwen3-8b")
         lm = LM(cfg)
         tmp = tempfile.mkdtemp()
@@ -232,10 +222,10 @@ def row10_parallel(tmp):
             is_leaf=lambda x: isinstance(x, P))
         st = init_train_state(lm, jax.random.PRNGKey(0))
         st_a = jax.tree.map(jax.device_put, st, sps(mesh_a))
-        Checkpointer(tmp).save(st_a, step=1)
+        CheckpointSession(tmp).save(st_a, step=1)
         for shape in ((2, 4), (8, 1)):
             mesh_b = make_test_mesh(shape, ("data", "model"))
-            got, _ = Checkpointer(tmp).load_latest(
+            got, _ = CheckpointSession(tmp).load_latest(
                 target_struct=jax.eval_shape(
                     lambda: init_train_state(lm, jax.random.PRNGKey(0))),
                 shardings=sps(mesh_b))
@@ -249,40 +239,52 @@ def row10_parallel(tmp):
     return "sharded job dumped under step barrier; elastic restore (4,2)->(2,4)->(8,1)"
 
 
-ROWS = [(1, row1_simple_serial), (2, row2_threads), (3, row3_open_files),
-        (4, row4_containers), (5, row5_self_checkpoint),
-        (6, row6_cpu_specific), (7, row7_accelerators),
-        (8, row8_network_serving), (9, row9_network_fs),
-        (10, row10_parallel)]
+# capability name -> heavy exercise; coverage of TABLE1 is asserted in run()
+EXERCISES = {fn.__name__: fn for fn in (
+    serial_dump_restore, threaded_dump, open_file_cursors,
+    env_fingerprint_portability, self_checkpoint, backend_retarget,
+    device_state_capture, serving_session_migration, replica_repair,
+    cross_topology_restore)}
 
 
 def run(emit=print) -> list:
+    report = capabilities()
+    rows = report.table1_rows()
+    missing = [c.name for c in rows if c.name not in EXERCISES]
+    assert not missing, f"Table-1 capabilities without an exercise: {missing}"
     results = []
     with tempfile.TemporaryDirectory() as tmp:
-        for idx, fn in ROWS:
-            name, paper = PAPER[idx]
+        for cap in rows:
             t0 = time.time()
-            try:
-                evidence = fn(tmp)
-                ours = "Working"
-            except Exception as e:  # pragma: no cover
-                evidence = f"FAILED: {e!r}"
-                ours = "Not working"
+            if not cap.supported:
+                ours, evidence = "Not working", f"probe: {cap.detail}"
+            else:
+                try:
+                    evidence = EXERCISES[cap.name](tmp)
+                    ours = "Working"
+                except Exception as e:  # pragma: no cover
+                    evidence = f"FAILED: {e!r}"
+                    ours = "Not working"
             dt = time.time() - t0
-            results.append({"row": idx, "test": name, "paper_criu": paper,
+            results.append({"row": cap.paper_row, "test": cap.paper_name,
+                            "capability": cap.name,
+                            "paper_criu": cap.paper_verdict,
                             "repro": ours, "evidence": evidence,
                             "seconds": round(dt, 2)})
-            emit(f"table1,row{idx:02d}_{ours},{dt * 1e6:.0f},"
-                 f"\"{name} | paper: {paper} | ours: {ours}\"")
+            emit(f"table1,row{cap.paper_row:02d}_{ours},{dt * 1e6:.0f},"
+                 f"\"{cap.paper_name} | paper: {cap.paper_verdict} | "
+                 f"ours: {ours}\"")
     return results
 
 
 def markdown(results) -> str:
-    lines = ["| # | Test (paper Table 1) | CRIU (paper) | repro (this work) | evidence |",
-             "|---|---|---|---|---|"]
+    lines = ["| # | Test (paper Table 1) | capability | CRIU (paper) | "
+             "repro (this work) | evidence |",
+             "|---|---|---|---|---|---|"]
     for r in results:
-        lines.append(f"| {r['row']} | {r['test']} | {r['paper_criu']} | "
-                     f"**{r['repro']}** | {r['evidence']} |")
+        lines.append(f"| {r['row']} | {r['test']} | `{r['capability']}` | "
+                     f"{r['paper_criu']} | **{r['repro']}** | "
+                     f"{r['evidence']} |")
     return "\n".join(lines)
 
 

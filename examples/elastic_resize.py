@@ -41,8 +41,8 @@ CODE = textwrap.dedent("""
     from repro.training.train_loop import (init_train_state, make_train_step,
                                            train_state_pspecs)
     from repro.launch.mesh import make_test_mesh
-    from repro.core import (Checkpointer, MigrationOrchestrator, resume,
-                            train_meta)
+    from repro.api import (CheckpointSession, MigrateRequest,
+                           MigrationPolicy, RestoreRequest, SessionConfig)
     from repro.data import DataIterator, TokenDataset
 
     cfg = configs.get_tiny("qwen3-8b")
@@ -86,11 +86,12 @@ CODE = textwrap.dedent("""
         lm, jax.random.PRNGKey(0)), sps_a)
     it1 = DataIterator(ds, global_batch=8, seq_len=32)
     st, _ = run(st, it1, 4, fn_a, bsp_a)
-    ck = Checkpointer(f"{tmp}/ck")
-    orch = MigrationOrchestrator(ck, arch=cfg.name, mesh=mesh_a).install()
-    orch.handler.request("resize-drill")
-    assert orch.migrate(st, it1) == 85
-    orch.uninstall()
+    sess = CheckpointSession(SessionConfig(
+        root=f"file://{tmp}/ck",
+        migration=MigrationPolicy(arch=cfg.name, mesh=mesh_a)))
+    ticket = sess.migrate(MigrateRequest(state=st, iterator=it1,
+                                         reason="resize-drill"))
+    assert ticket.exit_code == 85
     print("dumped on mesh (4 data, 2 model) with migration record")
 
     # ---- invariant 1: restore onto B and C is bit-identical to the dump
@@ -98,8 +99,8 @@ CODE = textwrap.dedent("""
     sps_b, bsp_b, fn_b = stepper(mesh_b)
     struct = jax.eval_shape(lambda: init_train_state(
         lm, jax.random.PRNGKey(0)))
-    rep = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_b,
-                 mesh=mesh_b)
+    rep = sess.restore(RestoreRequest(target_struct=struct,
+                                      shardings=sps_b, mesh=mesh_b))
     assert rep.digest_verified, "integrity digest must prove bit-identity"
     assert rep.topology_changed and "dp_degree" in rep.changes, rep.changes
     assert bitwise(st, rep.state), "restored state != dumped state"
@@ -107,8 +108,8 @@ CODE = textwrap.dedent("""
 
     mesh_c = make_test_mesh((8, 1), ("data", "model"))
     sps_c, _, _ = stepper(mesh_c)
-    rep_c = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_c,
-                   mesh=mesh_c)
+    rep_c = sess.restore(RestoreRequest(target_struct=struct,
+                                        shardings=sps_c, mesh=mesh_c))
     assert rep_c.digest_verified and bitwise(st, rep_c.state)
     print("restore onto (8 data, 1 model): bit-identical — topology is a "
           "restore-time choice")
@@ -117,8 +118,8 @@ CODE = textwrap.dedent("""
     st_b = jax.tree.map(jnp.asarray, rep.state)
     it2 = rep.make_iterator(ds)
     st_b, _ = run(st_b, it2, 4, fn_b, bsp_b)
-    rep2 = resume(f"{tmp}/ck", target_struct=struct, shardings=sps_b,
-                  mesh=mesh_b)
+    rep2 = sess.restore(RestoreRequest(target_struct=struct,
+                                       shardings=sps_b, mesh=mesh_b))
     st_b2, _ = run(jax.tree.map(jnp.asarray, rep2.state),
                    rep2.make_iterator(ds), 4, fn_b, bsp_b)
     assert bitwise(st_b, st_b2), "replayed continuation must be bitwise equal"
@@ -143,14 +144,15 @@ CODE = textwrap.dedent("""
     ref_dp.run(6)
     t = ElasticDPTrainer(lm, opt, ds2, global_batch=8, seq_len=32, hosts=4)
     t.run(3)
-    ck2 = Checkpointer(f"{tmp}/ck2")
-    orch2 = MigrationOrchestrator(ck2, arch=cfg.name,
-                                  topology=t.topology()).install()
-    orch2.handler.request("resize-drill")
-    assert orch2.migrate(t.state, t.iters[0]) == 85
-    orch2.uninstall()
-    rep_dp = resume(f"{tmp}/ck2", target_struct=struct, host_count=2,
-                    dp_degree=2)
+    sess2 = CheckpointSession(SessionConfig(
+        root=f"file://{tmp}/ck2",
+        migration=MigrationPolicy(arch=cfg.name, topology=t.topology())))
+    ticket2 = sess2.migrate(MigrateRequest(state=t.state,
+                                           iterator=t.iters[0],
+                                           reason="resize-drill"))
+    assert ticket2.exit_code == 85
+    rep_dp = sess2.restore(RestoreRequest(target_struct=struct,
+                                          host_count=2, dp_degree=2))
     t2 = ElasticDPTrainer.from_resume(lm, opt, ds2, rep_dp, seq_len=32)
     t2.run(3)
     assert bitwise(ref_dp.state, t2.state), \\

@@ -1,10 +1,12 @@
-"""Quickstart: the paper's workflow end-to-end in one minute on CPU.
+"""Quickstart: the paper's workflow end-to-end in one minute on CPU,
+through the repro.api service façade (the libcriu analogue).
 
-1. train a tiny LM a few steps
-2. criu-style dump at an arbitrary step
-3. restore (fresh objects — "another machine")
-4. continue; verify the continuation is bitwise identical
-5. migrate a serving session the same way
+1. probe the environment (`criu check` -> capabilities())
+2. train a tiny LM a few steps
+3. criu-style dump at an arbitrary step (CheckpointSession + DumpRequest)
+4. restore (fresh session — "another machine") via RestoreRequest
+5. continue; verify the continuation is bitwise identical
+6. migrate a serving session the same way
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import Checkpointer, train_meta
+from repro.api import (CheckpointSession, DumpRequest, RestoreRequest,
+                       SessionConfig, capabilities)
+from repro.core import train_meta
 from repro.data import DataIterator, TokenDataset
 from repro.models import LM
 from repro.optim import OptConfig
@@ -29,26 +33,37 @@ step = jax.jit(make_train_step(lm, OptConfig(warmup_steps=2,
                                              total_steps=100)))
 ds = TokenDataset(f"{tmp}/data", vocab_size=cfg.vocab_size, seed=0)
 
-# --- 1. train 6 steps ------------------------------------------------------
+# --- 1. criu check --------------------------------------------------------
+caps = capabilities()
+assert caps.supported("serial_dump_restore")
+print(f"capabilities: {sum(c.supported for c in caps)}/"
+      f"{len(tuple(caps.capabilities))} supported "
+      f"(async lanes: {caps.supported('async_lanes')}, "
+      f"delta8: {caps.supported('delta8_codec')}, "
+      f"cross-topology: {caps.supported('cross_topology_restore')})")
+
+# --- 2. train 6 steps -----------------------------------------------------
 state = init_train_state(lm, jax.random.PRNGKey(0))
 it = DataIterator(ds, global_batch=4, seq_len=64)
 for _ in range(6):
     state, m = step(state, {"tokens": jnp.asarray(it.next())})
 print(f"step 6 loss {float(m['loss']):.4f}")
 
-# --- 2. dump ----------------------------------------------------------------
-ck = Checkpointer(f"{tmp}/ckpt")
-out = ck.save(state, step=6, meta=train_meta(arch=cfg.name, step=6,
-                                             data_state=it.state()))
-print(f"dumped image {out['image_id']} "
-      f"({out['stats']['bytes_raw'] >> 20} MiB, "
-      f"{out['stats']['chunks']} chunks)")
+# --- 3. dump --------------------------------------------------------------
+sess = CheckpointSession(SessionConfig(root=f"file://{tmp}/ckpt"))
+receipt = sess.dump(DumpRequest(
+    state=state, step=6,
+    meta=train_meta(arch=cfg.name, step=6, data_state=it.state())))
+print(f"dumped image {receipt.image_id} "
+      f"({receipt.stats['bytes_raw'] >> 20} MiB, "
+      f"{receipt.stats['chunks']} chunks, {receipt.duration_s * 1e3:.0f}ms)")
 
-# --- 3+4. restore into fresh objects and continue --------------------------
+# --- 4+5. restore into fresh objects and continue -------------------------
 struct = jax.eval_shape(lambda: init_train_state(lm, jax.random.PRNGKey(0)))
-restored, man = ck.load_latest(target_struct=struct)
-restored = jax.tree.map(jnp.asarray, restored)
-it2 = DataIterator.restore(ds, man["meta"]["data"])
+res = CheckpointSession(f"file://{tmp}/ckpt").restore(
+    RestoreRequest(target_struct=struct))
+restored = jax.tree.map(jnp.asarray, res.state)
+it2 = DataIterator.restore(ds, res.manifest["meta"]["data"])
 for _ in range(4):
     restored, m2 = step(restored, {"tokens": jnp.asarray(it2.next())})
 
@@ -59,23 +74,22 @@ same = all(bool(jnp.all(a == b)) for a, b in
 print(f"continuation bitwise identical: {same} "
       f"(loss {float(m1['loss']):.4f} == {float(m2['loss']):.4f})")
 
-# --- 5. migrate a serving session -------------------------------------------
+# --- 6. migrate a serving session -----------------------------------------
 params = restored["params"]
 prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 8),
                                         0, cfg.vocab_size))
 eng = ServeEngine(lm, params, max_len=32, donate_cache=False)
 eng.submit(prompts)
 ref = eng.generate(10)                 # uninterrupted reference
-ck2 = Checkpointer(f"{tmp}/serve")
+serve_sess = CheckpointSession(f"file://{tmp}/serve")
 
 eng_a = ServeEngine(lm, params, max_len=32, donate_cache=False)
 eng_a.submit(prompts)
 eng_a.generate(4)
-ck2.save(eng_a.session_state(), step=4)
+eng_a.checkpoint(serve_sess, arch=cfg.name)
 
-sess, _ = ck2.load_latest()
 eng_b = ServeEngine(lm, params, max_len=32, donate_cache=False)
-eng_b.restore_session(jax.tree.map(jnp.asarray, sess))
+eng_b.resume_from(serve_sess)
 out_b = eng_b.generate(10)
 print(f"migrated serving session identical: {np.array_equal(out_b, ref)}")
 print("quickstart OK")

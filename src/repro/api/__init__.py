@@ -1,0 +1,61 @@
+"""repro.api — the single public surface of the checkpoint/restore stack.
+
+The paper's CRIU exposes one engine through three coherent entry points
+(CLI, libcriu, RPC) plus a `criu check` capability probe; this package is
+that consolidation for the reproduction. One session type, URI-addressed
+storage tiers, typed request/response pairs, and an environment probe:
+
+    from repro.api import (CheckpointSession, SessionConfig, DumpRequest,
+                           RestoreRequest, MigrateRequest, capabilities)
+
+    cfg = SessionConfig(root="file:///ckpts/run17",
+                        replicas=("mem://hot",),
+                        codec=CodecPolicy(optimizer="delta8"),
+                        preemption=PreemptionPolicy(install_signals=True))
+    with CheckpointSession(cfg) as sess:
+        sess.dump(DumpRequest(state=state, step=s, meta=meta,
+                              mode="async"))
+        ...
+        if sess.should_migrate():                  # SIGTERM / straggler
+            ticket = sess.migrate(MigrateRequest(state=state, iterator=it))
+            sys.exit(ticket.exit_code)             # 85: reschedule me
+
+    # next incarnation — any machine, any topology:
+    res = CheckpointSession(cfg).restore(RestoreRequest(
+        target_struct=struct, host_count=2, dp_degree=2))
+    state, it = res.state, res.make_iterator(dataset)
+
+    capabilities()            # `criu check`: what does THIS env support?
+
+Everything here is stable, versioned surface (tests/test_api_surface.py
+snapshots names and signatures). The legacy facades in repro.core
+(Checkpointer, AsyncCheckpointer) are deprecation shims over a session;
+DESIGN.md §7 maps old names to new."""
+from __future__ import annotations
+
+from repro.api.capabilities import (TABLE1, Capability, CapabilityReport,
+                                    capabilities)
+from repro.api.config import (AsyncPolicy, CodecPolicy, MigrationPolicy,
+                              PreemptionPolicy, RetentionPolicy,
+                              SessionConfig)
+from repro.api.requests import (DumpReceipt, DumpRequest, MigrateRequest,
+                                MigrationTicket, RestoreRequest,
+                                RestoreResult)
+from repro.api.session import CheckpointSession
+
+API_VERSION = 1
+
+__all__ = [
+    "API_VERSION",
+    # session
+    "CheckpointSession",
+    # configuration
+    "SessionConfig", "RetentionPolicy", "CodecPolicy", "AsyncPolicy",
+    "PreemptionPolicy", "MigrationPolicy",
+    # typed requests / responses
+    "DumpRequest", "DumpReceipt",
+    "RestoreRequest", "RestoreResult",
+    "MigrateRequest", "MigrationTicket",
+    # capability probing (`criu check`)
+    "capabilities", "Capability", "CapabilityReport", "TABLE1",
+]

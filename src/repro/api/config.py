@@ -1,0 +1,137 @@
+"""SessionConfig: the single typed description of a checkpoint session.
+
+Everything the old facades took as loose constructor kwargs is a policy
+object here, so callers compose exactly the concerns they care about:
+
+    cfg = SessionConfig(
+        root="file:///ckpts/run17", replicas=("mem://hot", "/mnt/mirror"),
+        retention=RetentionPolicy(keep_last=5, keep_every=100),
+        codec=CodecPolicy(optimizer="delta8"),
+        async_dumps=AsyncPolicy(enabled=True, max_pending=2),
+        preemption=PreemptionPolicy(install_signals=True),
+        migration=MigrationPolicy(arch="qwen3-8b"))
+
+Tiers are URI-addressed (file://, mem://, or a plain path — see
+core.storage.as_tier); replica entries may also be pre-built Tier objects.
+All policies are frozen: a session's behavior is fixed at open time."""
+from __future__ import annotations
+
+import dataclasses
+import signal as _signal
+from typing import Any, Callable
+
+CODEC_NAMES = ("none", "bf16", "delta8")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetentionPolicy:
+    """Which images survive: the newest ``keep_last`` plus every step
+    multiple of ``keep_every`` (0 disables); delta-chain parents of kept
+    images are always pinned."""
+    keep_last: int = 3
+    keep_every: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecPolicy:
+    """Per-leaf codec selection. ``params``/``optimizer`` name a codec for
+    the two halves of a train state (params stay lossless by default;
+    optimizer moments may opt into delta8/bf16); ``custom`` is an explicit
+    path->codec callable that overrides both. ``incremental`` links parent
+    images (chunk dedup + delta8 chains)."""
+    params: str = "none"
+    optimizer: str = "none"
+    incremental: bool = True
+    custom: Callable[[str], str] | None = None
+
+    def __post_init__(self):
+        for which in (self.params, self.optimizer):
+            if which not in CODEC_NAMES:
+                raise ValueError(f"unknown codec {which!r}; "
+                                 f"choose from {CODEC_NAMES}")
+
+    def to_leaf_policy(self) -> Callable[[str], str] | None:
+        """Compile to the engine's path->codec callable (None == all-raw,
+        which skips codec bookkeeping entirely)."""
+        if self.custom is not None:
+            return self.custom
+        if self.params == "none" and self.optimizer == "none":
+            return None
+        params, opt = self.params, self.optimizer
+
+        def policy(path: str) -> str:
+            if path.startswith("opt/") or "/opt/" in path:
+                return opt
+            return params
+        return policy
+
+    @property
+    def lossless(self) -> bool:
+        return (self.custom is None and self.params == "none"
+                and self.optimizer == "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPolicy:
+    """Async dump lane: DumpRequest(mode="async") capture-and-go semantics.
+    ``max_pending`` bounds how many captured host trees may be alive at
+    once (memory backpressure)."""
+    enabled: bool = True
+    max_pending: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """Scheduler-preemption handling: when ``install_signals`` the session
+    (as a context manager) installs handlers that flag — never dump — on
+    the listed signals; the training loop polls should_migrate() at step
+    boundaries. ``exit_code`` is what MigrationTicket carries (85 =
+    HTCondor self-checkpoint)."""
+    install_signals: bool = False
+    signals: tuple = (_signal.SIGTERM, _signal.SIGUSR2)
+    exit_code: int = 85
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPolicy:
+    """Dump-side migration context: what the migration record says about
+    this job (arch, topology) and which fleet policies feed it. ``monitor``
+    (a training.fault_tolerance.StragglerMonitor) makes observe_step()
+    escalate persistent stragglers into preemption requests; ``restart``
+    (a RestartPolicy) is consulted by launchers between incarnations;
+    ``verify_digest`` gates restore-side bit-identity verification."""
+    arch: str = ""
+    topology: dict | None = None
+    mesh: Any = None
+    monitor: Any = None               # StragglerMonitor
+    restart: Any = None               # RestartPolicy
+    verify_digest: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """Everything a CheckpointSession needs, in one typed object.
+
+    root/replicas: URI-addressed tiers (file://, mem://, plain path, or
+    Tier objects). chunk_bytes: chunk window override. serial: run the
+    single-threaded baseline engine. executor: share a CheckpointExecutor
+    across sessions (defaults to the process-wide pipelined engine)."""
+    root: Any
+    replicas: tuple = ()
+    retention: RetentionPolicy = dataclasses.field(
+        default_factory=RetentionPolicy)
+    codec: CodecPolicy = dataclasses.field(default_factory=CodecPolicy)
+    async_dumps: AsyncPolicy = dataclasses.field(default_factory=AsyncPolicy)
+    preemption: PreemptionPolicy = dataclasses.field(
+        default_factory=PreemptionPolicy)
+    migration: MigrationPolicy = dataclasses.field(
+        default_factory=MigrationPolicy)
+    chunk_bytes: int | None = None
+    serial: bool = False
+    executor: Any = None
+
+    def __post_init__(self):
+        if isinstance(self.replicas, (str, bytes)):
+            raise TypeError("SessionConfig.replicas must be a sequence of "
+                            "tier references, not a single string")
+        object.__setattr__(self, "replicas", tuple(self.replicas))

@@ -1,0 +1,132 @@
+"""Typed request/response pairs for the service façade — the libcriu-RPC
+analogue: every operation on a CheckpointSession is a frozen request object
+in and a frozen receipt/result/ticket object out.
+
+  DumpRequest    -> DumpReceipt       (criu dump)
+  RestoreRequest -> RestoreResult     (criu restore, incl. cross-topology)
+  MigrateRequest -> MigrationTicket   (preempt-to-migrate: dump + exit 85)
+
+Requests carry only caller intent; everything environment-shaped (tiers,
+policies, executor) lives in the SessionConfig the session was opened with.
+The objects are plain dataclasses so they serialize naturally (asdict) for
+logging / an eventual wire protocol."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+# ------------------------------------------------------------------- dump
+@dataclasses.dataclass(frozen=True)
+class DumpRequest:
+    """Dump ``state`` (a device/host pytree) as the image for ``step``.
+
+    mode: "sync" blocks until the image is durable; "async" captures the
+    device state synchronously (the step barrier) and returns immediately —
+    the receipt is pending until CheckpointSession.wait()."""
+    state: Any
+    step: int
+    meta: dict | None = None
+    topology: dict | None = None
+    mode: str = "sync"                    # "sync" | "async"
+
+    def __post_init__(self):
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"DumpRequest.mode must be 'sync' or 'async', "
+                             f"got {self.mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DumpReceipt:
+    """Proof of a dump. ``committed`` is False for an async request that has
+    been captured+enqueued but not yet waited on (image_id/stats arrive with
+    the receipts returned by CheckpointSession.wait())."""
+    step: int
+    mode: str
+    committed: bool
+    image_id: str | None = None
+    stats: dict | None = None
+    duration_s: float | None = None
+
+
+# ---------------------------------------------------------------- restore
+@dataclasses.dataclass(frozen=True)
+class RestoreRequest:
+    """Restore an image (latest by default) — possibly onto a different
+    topology than it was dumped from.
+
+    target_struct: pytree of ShapeDtypeStructs the output must match.
+    shardings: matching pytree of Shardings -> leaves are device_put onto
+    the new mesh. host_count/dp_degree/global_batch: the topology the job
+    is restarting on (None keeps the dumped — or straggler-planned —
+    value). verify_digest: check the recorded logical-state digest against
+    the decoded bytes before any device placement."""
+    image_id: str | None = None
+    target_struct: Any = None
+    shardings: Any = None
+    mesh: Any = None
+    host_count: int | None = None
+    dp_degree: int | None = None
+    global_batch: int | None = None
+    verify_digest: bool = True
+    allow_env_mismatch: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoreResult:
+    """The restored state plus everything the next incarnation needs: the
+    migration record, the topology-change plan, and the remapped data
+    cursor. Wraps core.migration.ResumeReport (kept at ``report``)."""
+    state: Any
+    image_id: str
+    step: int
+    manifest: dict
+    migration: Any                    # core.migration.MigrationManifest
+    topology_changed: bool
+    changes: dict
+    host_count: int
+    dp_degree: int
+    data: dict
+    digest_verified: bool | None      # None: image predates digests
+    report: Any = None                # the underlying ResumeReport
+
+    def make_iterator(self, ds, *, dp_rank: int = 0, dp_size: int = 1,
+                      prefetch: int = 2):
+        """Rebuild the data iterator at the remapped cursor (see
+        core.migration.ResumeReport.make_iterator for the dp_rank/dp_size
+        contract — they are the data-feeding process layout, not the mesh
+        DP degree)."""
+        return self.report.make_iterator(ds, dp_rank=dp_rank,
+                                         dp_size=dp_size, prefetch=prefetch)
+
+
+# ---------------------------------------------------------------- migrate
+@dataclasses.dataclass(frozen=True)
+class MigrateRequest:
+    """Turn "this job must go away" into a durable, restorable image.
+
+    state: the device pytree to dump. iterator: the live data iterator
+    (quiesced and cursor-captured). reason: recorded in the migration
+    manifest when no signal/escalation already set one."""
+    state: Any
+    iterator: Any = None
+    step: int | None = None
+    data_state: dict | None = None
+    rng: Any = None
+    meta_extra: dict | None = None
+    opt_cfg: Any = None
+    reason: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationTicket:
+    """The dump side's half of a migration: the image is durable, the
+    process should exit with ``exit_code`` (85, HTCondor's self-checkpoint
+    convention) and the next incarnation resumes from ``image_id`` on
+    whatever topology it gets."""
+    exit_code: int
+    image_id: str
+    step: int
+    reason: str | None
+    latency_s: float
+    record: Any                       # core.migration.MigrationManifest

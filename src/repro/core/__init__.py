@@ -1,26 +1,31 @@
 """repro.core — CRIU-style userspace checkpoint/restore for JAX jobs.
 
-The paper's contribution as a composable module. High-level facade:
+The public door to this engine is **repro.api** — one CheckpointSession
+type constructed from a typed SessionConfig with URI-addressed tiers,
+typed request/response pairs (DumpRequest -> DumpReceipt, RestoreRequest
+-> RestoreResult, MigrateRequest -> MigrationTicket) and a `criu check`
+style capabilities() probe:
 
-    ckpt = Checkpointer("ckpts/", replicas=["remote_mirror/"])
-    ckpt.save(train_state, step=s, meta=train_meta(...))     # sync
-    ckpt.save_async(...); ckpt.wait()                        # overlapped
-    state, man = ckpt.load_latest(target_struct, shardings)  # any topology
+    from repro.api import CheckpointSession, SessionConfig, DumpRequest
 
-Dumps and restores are planned (core/plan.py: immutable DumpPlan /
-RestorePlan) then executed on a shared bounded thread-pool engine
-(core/executor.py) that pipelines encode+hash with tier I/O;
-``serial=True`` keeps the single-threaded baseline for comparison.
+    with CheckpointSession(SessionConfig(root="file:///ckpts")) as sess:
+        sess.dump(DumpRequest(state=train_state, step=s, meta=meta))
+        state = sess.restore().state           # any machine, any topology
 
-See DESIGN.md §2 for the CRIU-concept mapping, §3 for the plan/execute
-pipeline and its threading model, and tests/ for the Table-1 capability
-matrix reproduction.
-"""
+repro.core remains the engine room: plan/execute pipeline (core/plan.py,
+core/executor.py), content-addressed storage tiers, integrity + replica
+repair, the preempt-to-migrate lifecycle (core/migration.py). The old
+facades — ``Checkpointer`` and ``AsyncCheckpointer`` — still import from
+here but are deprecation shims over a session (core/facade.py); new code
+should not grow calls to them. DESIGN.md §2 has the CRIU-concept mapping,
+§3 the pipeline, §7 the old->new API mapping.
+
+This module re-exports the repro.api names (lazily, to keep the
+core-imports-api/api-imports-core layering acyclic) so ``from repro.core
+import CheckpointSession`` also works — but the one canonical import path
+is repro.api."""
 from __future__ import annotations
 
-import jax
-
-from repro.core.async_engine import AsyncCheckpointer
 from repro.core.compression import default_policy
 from repro.core.dump import dump, flatten_with_paths, host_tree_by_path
 from repro.core.executor import CheckpointExecutor, get_default_executor
@@ -35,121 +40,36 @@ from repro.core.restore import latest_image_id, read_manifest, restore
 from repro.core.storage import LocalDirTier, MemoryTier, as_tier
 from repro.core.state import serve_meta, train_meta
 
+# Names resolved through repro.api on first access. The legacy facades
+# (Checkpointer/AsyncCheckpointer, now deprecation shims in core/facade.py)
+# resolve the same way because they subclass api.CheckpointSession / wrap
+# its engine. Lazy because repro.api imports repro.core submodules: a
+# top-level import here would deadlock whichever package is imported
+# second into a partially-initialized first.
+_API_EXPORTS = (
+    "API_VERSION", "CheckpointSession",
+    "SessionConfig", "RetentionPolicy", "CodecPolicy", "AsyncPolicy",
+    "PreemptionPolicy", "MigrationPolicy",
+    "DumpRequest", "DumpReceipt", "RestoreRequest", "RestoreResult",
+    "MigrateRequest", "MigrationTicket",
+    "capabilities", "Capability", "CapabilityReport", "TABLE1",
+)
+_FACADE_EXPORTS = ("Checkpointer", "AsyncCheckpointer")
 
-class Checkpointer:
-    """Facade tying plan/execute, retention and async together."""
 
-    def __init__(self, root, *, replicas=(), keep_last: int = 3,
-                 keep_every: int = 0, codec_policy=None,
-                 incremental: bool = True, chunk_bytes: int | None = None,
-                 serial: bool = False,
-                 executor: CheckpointExecutor | None = None):
-        # one Tier instance shared with the registry: gc must update the
-        # same in-memory chunk index the dump path dedups against
-        self.tier = as_tier(root)
-        self.root = self.tier
-        self.replicas = [as_tier(r) for r in replicas]
-        self.keep_last = keep_last
-        self.keep_every = keep_every
-        self.codec_policy = codec_policy
-        self.incremental = incremental
-        self.chunk_bytes = chunk_bytes
-        self.executor = executor or (
-            CheckpointExecutor(serial=True) if serial
-            else get_default_executor())
-        self.registry = Registry(self.tier)
-        self._async = None
-        self._drained = []      # async results consumed by sync-save drains
-        self._prev_host = None  # for delta8 chains
-        self._prev_step = None  # step whose image _prev_host belongs to
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        import repro.api
+        obj = getattr(repro.api, name)
+    elif name in _FACADE_EXPORTS:
+        from repro.core import facade
+        obj = getattr(facade, name)
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    globals()[name] = obj       # cache: one class object per process
+    return obj
 
-    # ------------------------------------------------------------------ save
-    def _save_kw(self, step, meta, topology, with_parent: bool = True):
-        parent = None
-        prev_host = self._prev_host
-        if not self.incremental:
-            # no parent link will ever be written, so a delta8 leaf could
-            # never be decoded — force full encodes
-            prev_host = None
-        elif with_parent:
-            parent, prev_host = self.registry.resolve_parent_baseline(
-                self._prev_step, prev_host, step)
-        kw = dict(step=step, meta=meta or {}, parent=parent,
-                  codec_policy=self.codec_policy,
-                  prev_host_tree=prev_host, topology=topology or {})
-        if self.chunk_bytes:
-            kw["chunk_bytes"] = self.chunk_bytes
-        return kw
 
-    def save(self, tree, *, step: int, meta: dict | None = None,
-             topology: dict | None = None) -> dict:
-        if self._async is not None:
-            # drain in-flight async dumps first: the submit-time parent
-            # scan must see them committed (causal chain), and retain/gc
-            # below must never run while a dump is still writing — gc
-            # would reap its not-yet-manifest-referenced chunks. Keep the
-            # drained results: the next wait() still owes them to the
-            # caller
-            self._drained.extend(self._async.wait())
-        host = jax.device_get(tree)   # one capture, shared with the baseline
-        out = dump(host, self.tier, replicas=self.replicas,
-                   executor=self.executor,
-                   **self._save_kw(step, meta, topology))
-        if self.codec_policy is not None and self.incremental:
-            self._prev_host = host_tree_by_path(host)
-            self._prev_step = step
-        self.registry.retain(self.keep_last, self.keep_every)
-        self.registry.gc()
-        return out
-
-    def save_async(self, tree, *, step: int, meta: dict | None = None,
-                   topology: dict | None = None):
-        if self._async is None:
-            self._async = AsyncCheckpointer(self.tier,
-                                            replicas=self.replicas,
-                                            executor=self.executor)
-        # parent=None here: the incremental link is resolved when the
-        # ordered job runs (a submit-time registry scan would both block
-        # the step and miss still-in-flight parents)
-        kw = self._save_kw(step, meta, topology, with_parent=False)
-        baseline_step = self._prev_step
-        host = jax.device_get(tree)   # one capture: the job's input and
-        #                               the next call's delta baseline
-        if self.codec_policy is not None and self.incremental:
-            # mirror save(): job N's delta baseline (kw's prev_host_tree,
-            # the tree of the PRECEDING save call) must equal the content
-            # of the image the job resolves as parent at run time, so the
-            # next call's baseline becomes this tree
-            self._prev_host = host_tree_by_path(host)
-            self._prev_step = step
-        self._async.dump_async(host, resolve_parent=self.incremental,
-                               baseline_step=baseline_step, **kw)
-
-    def wait(self):
-        if self._async is not None:
-            out, self._drained = self._drained + self._async.wait(), []
-            self.registry.retain(self.keep_last, self.keep_every)
-            self.registry.gc()
-            return out
-        return []
-
-    # ------------------------------------------------------------------ plan
-    def plan(self, tree_or_abstract, *, step: int = 0) -> DumpPlan:
-        """Dry-run dump plan (works on ShapeDtypeStructs — no device/tier
-        access): leaf partition, codec decisions, sizes."""
-        from repro.core.chunking import CHUNK_BYTES
-        return plan_dump(flatten_with_paths(tree_or_abstract), step=step,
-                         codec_policy=self.codec_policy,
-                         prev_host_tree=self._prev_host,
-                         chunk_bytes=self.chunk_bytes or CHUNK_BYTES)
-
-    # ------------------------------------------------------------------ load
-    def load_latest(self, target_struct=None, shardings=None):
-        return restore(self.tier, target_struct=target_struct,
-                       shardings=shardings, replicas=self.replicas,
-                       executor=self.executor)
-
-    def load(self, image_id: str, target_struct=None, shardings=None):
-        return restore(self.tier, image_id, target_struct=target_struct,
-                       shardings=shardings, replicas=self.replicas,
-                       executor=self.executor)
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS) | set(_FACADE_EXPORTS))

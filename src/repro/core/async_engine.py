@@ -15,7 +15,7 @@ import threading
 
 import jax
 
-from repro.core import dump as dump_mod
+from repro.core.dump import dump as _dump_fn
 from repro.core.executor import CheckpointExecutor, get_default_executor
 
 
@@ -62,9 +62,9 @@ class AsyncCheckpointer:
                             Registry(self.root).resolve_parent_baseline(
                                 baseline_step, kw.get("prev_host_tree"),
                                 kw["step"])
-                    out = dump_mod.dump(host_tree, self.root,
-                                        replicas=self.replicas,
-                                        executor=self._ex, **kw)
+                    out = _dump_fn(host_tree, self.root,
+                                   replicas=self.replicas,
+                                   executor=self._ex, **kw)
                     with self._lock:
                         self._results.append(out)
                 except Exception as e:     # surfaced on wait()

@@ -1,0 +1,56 @@
+"""Deprecation shims: the pre-repro.api facades, now thin wrappers over a
+CheckpointSession. Kept so existing callers and tests run unchanged; new
+code should open a session (see repro.api and DESIGN.md §7 for the full
+old->new mapping). Constructing either facade emits a DeprecationWarning;
+importing this module (or repro.api) does not."""
+from __future__ import annotations
+
+import warnings
+
+from repro.api import (CheckpointSession, CodecPolicy, RetentionPolicy,
+                       SessionConfig)
+from repro.core.async_engine import AsyncCheckpointer as _AsyncEngine
+
+
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.{old} is deprecated; use {new} (see DESIGN.md §7 "
+        f"for the migration map)", DeprecationWarning, stacklevel=3)
+
+
+class Checkpointer(CheckpointSession):
+    """Legacy facade == a CheckpointSession opened from loose kwargs.
+
+    Differences from the session kept for back-compat: ``wait()`` returns
+    the raw result dicts ({"image_id", "stats"}) instead of DumpReceipts,
+    and ``root`` aliases the resolved tier."""
+
+    def __init__(self, root, *, replicas=(), keep_last: int = 3,
+                 keep_every: int = 0, codec_policy=None,
+                 incremental: bool = True, chunk_bytes: int | None = None,
+                 serial: bool = False, executor=None):
+        _deprecated("Checkpointer", "repro.api.CheckpointSession")
+        super().__init__(SessionConfig(
+            root=root, replicas=tuple(replicas),
+            retention=RetentionPolicy(keep_last=keep_last,
+                                      keep_every=keep_every),
+            codec=CodecPolicy(custom=codec_policy, incremental=incremental),
+            chunk_bytes=chunk_bytes, serial=serial, executor=executor))
+        self.root = self.tier
+
+    def wait(self):
+        return self._wait_raw()
+
+
+class AsyncCheckpointer(_AsyncEngine):
+    """Legacy standalone async facade. The engine itself lives in
+    core/async_engine.py (sessions submit to it without a shim); this
+    subclass only adds the deprecation signal for direct constructions."""
+
+    def __init__(self, root, *, replicas=(), max_pending: int = 2,
+                 executor=None):
+        _deprecated("AsyncCheckpointer",
+                    "repro.api.CheckpointSession with "
+                    "DumpRequest(mode='async') / AsyncPolicy")
+        super().__init__(root, replicas=replicas, max_pending=max_pending,
+                         executor=executor)

@@ -128,6 +128,7 @@ class MigrationOrchestrator:
         self.planned_dp_degree: int | None = None
         self.hosts_dropped: list = []
         self.last_migration: MigrationManifest | None = None
+        self.last_image_id: str | None = None
         self.migrate_latency_s: float | None = None
 
     # ------------------------------------------------------------ lifecycle
@@ -244,6 +245,7 @@ class MigrationOrchestrator:
                              topology=_topology_of(self.mesh, self.topology))
         self.ckpt.wait()                 # idempotent; async engines drain
         self.last_migration = rec
+        self.last_image_id = out["image_id"]
         self.migrate_latency_s = time.monotonic() - t0
         log.info("migrated: image %s at step %d (%s) in %.3fs",
                  out["image_id"], step, rec.reason, self.migrate_latency_s)

@@ -232,5 +232,44 @@ class MemoryTier(Tier):
                 del self.blobs[k]
 
 
+# process-local registry of named in-memory tiers: "mem://scratch" names
+# the SAME tier object on every resolution, so a dump through one session
+# round-trips through a restore in another (the CRIU page-server analogue
+# addressed like any other storage location)
+_MEM_TIERS: dict = {}
+_MEM_TIERS_LOCK = threading.Lock()
+
+TIER_SCHEMES = ("file", "mem")
+
+
 def as_tier(t) -> Tier:
-    return t if isinstance(t, Tier) else LocalDirTier(str(t))
+    """Resolve a tier reference: a Tier instance passes through; a string
+    (or PathLike) is interpreted as
+
+      file:///abs/path | file://rel/path   explicit local-directory tier
+      mem://<name>                         process-local in-memory tier
+                                           (same name -> same tier object)
+      plain path                           local-directory tier (back-compat)
+
+    An unknown ``scheme://`` is an error — previously a typo'd URI such as
+    ``s3://bucket/ck`` silently became a LocalDirTier at ``./s3:/bucket/ck``
+    under the cwd, and the job "checkpointed" into a directory nobody would
+    ever restore from."""
+    if isinstance(t, Tier):
+        return t
+    s = os.fspath(t) if hasattr(t, "__fspath__") else str(t)
+    if "://" in s:
+        scheme, _, rest = s.partition("://")
+        if scheme == "file":
+            return LocalDirTier(rest or ".")
+        if scheme == "mem":
+            name = rest.strip("/")
+            with _MEM_TIERS_LOCK:
+                if name not in _MEM_TIERS:
+                    _MEM_TIERS[name] = MemoryTier()
+                return _MEM_TIERS[name]
+        raise ValueError(
+            f"unknown tier URI scheme {scheme!r} in {s!r}; supported "
+            f"schemes: {', '.join(f'{x}://' for x in TIER_SCHEMES)} "
+            f"(or a plain filesystem path)")
+    return LocalDirTier(s)

@@ -6,6 +6,10 @@
   * --resume restores the latest image (onto a possibly different mesh),
   * straggler monitor + restart policy wired for fleet use.
 
+Everything checkpoint-shaped goes through ONE door: a
+repro.api.CheckpointSession opened from a typed SessionConfig, with
+DumpRequest/RestoreRequest/MigrateRequest driving the engine.
+
 CPU-friendly: use --tiny (reduced arch of the same family) or explicit
 dimension overrides. Example:
 
@@ -17,7 +21,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -25,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import (Checkpointer, EXIT_CHECKPOINTED,
-                        MigrationOrchestrator, PreemptionHandler, resume,
-                        train_meta)
+from repro.api import (CheckpointSession, DumpRequest, MigrateRequest,
+                       MigrationPolicy, PreemptionPolicy, RestoreRequest,
+                       SessionConfig)
+from repro.core import EXIT_CHECKPOINTED, PreemptionHandler, train_meta
 from repro.data import DataIterator, TokenDataset
 from repro.models.model import LM
 from repro.optim import OptConfig
@@ -50,6 +54,21 @@ def build_cfg(args):
     return cfg
 
 
+def build_session_config(args, cfg, monitor) -> SessionConfig:
+    """The one typed description of this run's checkpoint behavior."""
+    executor = None
+    if args.ckpt_io_workers and not args.ckpt_serial:
+        from repro.core import CheckpointExecutor
+        executor = CheckpointExecutor(io_workers=args.ckpt_io_workers)
+    return SessionConfig(
+        root=args.ckpt_dir, serial=args.ckpt_serial, executor=executor,
+        preemption=PreemptionPolicy(install_signals=True),
+        migration=MigrationPolicy(
+            arch=cfg.name, monitor=monitor,
+            topology={"axes": [], "dp_degree": 1,
+                      "device_count": jax.device_count(), "host_count": 1}))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b", choices=configs.ARCH_NAMES)
@@ -66,7 +85,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-dir", default="/tmp/repro_data")
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="tier URI or path (file:///..., mem://name, or a "
+                         "plain directory)")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-async", action="store_true")
     ap.add_argument("--ckpt-serial", action="store_true",
@@ -92,47 +113,35 @@ def main(argv=None):
 
     ds = TokenDataset(args.data_dir, vocab_size=cfg.vocab_size,
                       seed=args.seed)
-    ckpt = None
+    monitor = StragglerMonitor(num_hosts=1)
+    sess = None
     if args.ckpt_dir:
-        executor = None
-        if args.ckpt_io_workers and not args.ckpt_serial:
-            from repro.core import CheckpointExecutor
-            executor = CheckpointExecutor(io_workers=args.ckpt_io_workers)
-        ckpt = Checkpointer(args.ckpt_dir, serial=args.ckpt_serial,
-                            executor=executor)
-        plan = ckpt.plan(abstract_train_state(lm))
+        sess = CheckpointSession(build_session_config(args, cfg, monitor))
+        plan = sess.plan(abstract_train_state(lm))
         print(f"[train] ckpt plan: {plan.num_leaves} leaves, "
               f"{plan.total_bytes / 1e6:.1f} MB/image, "
               f"chunk {plan.chunk_bytes >> 20} MiB, "
               f"engine={'serial' if args.ckpt_serial else 'pipelined'}")
-    monitor = StragglerMonitor(num_hosts=1)
-    orch = None
-    if ckpt:
-        orch = MigrationOrchestrator(ckpt, monitor=monitor, arch=cfg.name,
-                                     topology={"axes": [], "dp_degree": 1,
-                                               "device_count":
-                                               jax.device_count(),
-                                               "host_count": 1})
-        preempt = orch.install().handler
+        sess.__enter__()                       # install signal handlers
+        preempt = sess.handler
     else:
         preempt = PreemptionHandler().install()
 
     state = None
     start_step = 0
-    if args.resume and ckpt and ckpt.registry.latest():
+    if args.resume and sess and sess.registry.latest():
         struct = jax.eval_shape(
             lambda: init_train_state(lm, jax.random.PRNGKey(args.seed)))
-        rep = resume(ckpt.tier, target_struct=struct, host_count=1,
-                     dp_degree=1, executor=ckpt.executor)
-        state = jax.tree.map(jnp.asarray, rep.state)
-        start_step = rep.data["step"]
-        it = rep.make_iterator(ds)
-        man = rep.manifest
-        note = (f" (migrated: {rep.migration.reason}, topology change "
-                f"{rep.changes})" if rep.topology_changed
-                else (f" (migrated: {rep.migration.reason})"
-                      if rep.migration.reason else ""))
-        print(f"[train] resumed from {man['image_id']} at step "
+        res = sess.restore(RestoreRequest(target_struct=struct,
+                                          host_count=1, dp_degree=1))
+        state = jax.tree.map(jnp.asarray, res.state)
+        start_step = res.data["step"]
+        it = res.make_iterator(ds)
+        note = (f" (migrated: {res.migration.reason}, topology change "
+                f"{res.changes})" if res.topology_changed
+                else (f" (migrated: {res.migration.reason})"
+                      if res.migration.reason else ""))
+        print(f"[train] resumed from {res.image_id} at step "
               f"{start_step}{note}")
     else:
         state = init_train_state(lm, jax.random.PRNGKey(args.seed))
@@ -141,16 +150,15 @@ def main(argv=None):
     it.start_prefetch()
 
     def save(kind: str):
-        if not ckpt:
+        if not sess:
             return
-        it_state = it.state()
         meta = train_meta(arch=cfg.name, step=int(state["step"]),
-                          data_state=it_state, opt_cfg=opt_cfg)
-        if args.ckpt_async and kind == "periodic":
-            ckpt.save_async(state, step=int(state["step"]), meta=meta)
-        else:
-            ckpt.wait()
-            ckpt.save(state, step=int(state["step"]), meta=meta)
+                          data_state=it.state(), opt_cfg=opt_cfg)
+        mode = "async" if args.ckpt_async and kind == "periodic" else "sync"
+        if mode == "sync":
+            sess.wait()
+        sess.dump(DumpRequest(state=state, step=int(state["step"]),
+                              meta=meta, mode=mode))
 
     metrics_log = []
     exit_code = 0
@@ -160,10 +168,13 @@ def main(argv=None):
             if preempt.preempt_requested():
                 print(f"[train] preemption ({preempt.reason}) at step {s}; "
                       f"checkpointing and exiting {EXIT_CHECKPOINTED}")
-                if orch:
-                    exit_code = orch.migrate(state, it, opt_cfg=opt_cfg)
+                if sess:
+                    ticket = sess.migrate(MigrateRequest(state=state,
+                                                         iterator=it,
+                                                         opt_cfg=opt_cfg))
+                    exit_code = ticket.exit_code
                     print(f"[train] migration image durable in "
-                          f"{orch.migrate_latency_s:.3f}s")
+                          f"{ticket.latency_s:.3f}s")
                 else:
                     it.stop_prefetch()
                     exit_code = EXIT_CHECKPOINTED
@@ -175,8 +186,8 @@ def main(argv=None):
             if args.step_delay:
                 time.sleep(args.step_delay)
             dt = time.time() - t0
-            if orch:
-                orch.observe_step([dt])   # straggler advice -> escalation
+            if sess:
+                sess.observe_step([dt])   # straggler advice -> escalation
             else:
                 monitor.observe([dt])
             if (s + 1) % args.log_every == 0 or s == start_step:
@@ -189,13 +200,19 @@ def main(argv=None):
             if args.ckpt_every and (s + 1) % args.ckpt_every == 0:
                 save("periodic")
         else:
-            if ckpt and (args.final_ckpt or args.ckpt_every) \
+            if sess and (args.final_ckpt or args.ckpt_every) \
                     and start_step < args.steps:
                 save("final")
-                ckpt.wait()
+                sess.wait()
     finally:
         it.stop_prefetch()
-        preempt.uninstall()
+        if sess:
+            # mirror CheckpointSession.__exit__: only drain async dumps on
+            # a clean exit — after a crash/Ctrl-C the original exception
+            # must surface, not a pending dump's error or a slow drain
+            sess.close(drain=sys.exc_info()[0] is None)
+        else:
+            preempt.uninstall()
         if args.metrics_file:
             with open(args.metrics_file, "w") as f:
                 json.dump(metrics_log, f, indent=1)

@@ -1,11 +1,22 @@
 """Batched serving engine with a checkpointable session.
 
 The session state (KV caches / recurrent states + generated tokens + cursor)
-is an ordinary pytree — repro.core dumps it like any job state. A serving
-session can therefore be stopped mid-generation, moved to another machine /
-mesh, and continued with bitwise-identical output (greedy decoding): the
-paper's "network applications" row, where CRIU could only restore on the
-same machine, becomes fully migratable because the state is abstract.
+is an ordinary pytree — the checkpoint engine dumps it like any job state. A
+serving session can therefore be stopped mid-generation, moved to another
+machine / mesh, and continued with bitwise-identical output (greedy
+decoding): the paper's "network applications" row, where CRIU could only
+restore on the same machine, becomes fully migratable because the state is
+abstract.
+
+Checkpointing goes through the repro.api service façade: ``checkpoint``
+issues a DumpRequest on a CheckpointSession, ``resume_from`` replays the
+latest (or a named) image into a live engine:
+
+    sess = CheckpointSession("file:///srv/ckpts")
+    receipt = engine.checkpoint(sess, step=tokens_done)
+    ...
+    engine2 = ServeEngine(lm, params, max_len=64)
+    engine2.resume_from(sess)            # another machine, same output
 """
 from __future__ import annotations
 
@@ -13,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.state import serve_meta
 from repro.models.model import LM
 
 
@@ -68,3 +80,27 @@ class ServeEngine:
         gen = np.asarray(state["generated"])
         self.out_tokens = [gen[:, i] for i in range(gen.shape[1])]
         self.prompt_len = int(state["prompt_len"])
+
+    # ------------------------------------------------- service façade glue
+    def checkpoint(self, session, *, step: int | None = None,
+                   arch: str = "", mode: str = "sync",
+                   extra: dict | None = None):
+        """Dump the live serving session through a CheckpointSession.
+        Returns the DumpReceipt (uncommitted for mode="async"; the
+        committed receipts come from session.wait())."""
+        from repro.api import DumpRequest
+        done = len(self.out_tokens)
+        step = done if step is None else int(step)
+        return session.dump(DumpRequest(
+            state=self.session_state(), step=step,
+            meta=serve_meta(arch=arch, tokens_done=done, extra=extra),
+            mode=mode))
+
+    def resume_from(self, session, *, image_id: str | None = None):
+        """Load a dumped serving session (latest image by default) into
+        THIS engine — the "restore on another machine" half. Returns the
+        RestoreResult for its manifest/meta."""
+        from repro.api import RestoreRequest
+        res = session.restore(RestoreRequest(image_id=image_id))
+        self.restore_session(jax.tree.map(jnp.asarray, res.state))
+        return res

@@ -12,6 +12,11 @@ restore — an *executable* path: core.migration.MigrationOrchestrator
 advice into a preemption request whose migration record pre-plans the
 suggested_host_count fleet, so the default restart already runs without
 the slow hosts (same global batch, remapped cursors).
+
+Launchers consume all of this through the service façade: configure the
+monitor via repro.api.MigrationPolicy(monitor=...), drive it with
+CheckpointSession.observe_step (or FleetPolicy.on_step), and translate
+exit codes with FleetPolicy.on_exit.
 """
 from __future__ import annotations
 
@@ -60,6 +65,36 @@ class StragglerMonitor:
                 "suggested_host_count": max(1, self.num_hosts - len(s)),
                 "expected_step_gain": max(0.0, max(self.ewma[i] for i in s)
                                           - self._median())}
+
+
+@dataclass
+class FleetPolicy:
+    """Bundle of fleet-health policies wired to the service façade: a
+    launcher hands the monitor to SessionConfig (via
+    MigrationPolicy(monitor=...)), calls ``on_step`` at every boundary, and
+    consults ``on_exit`` between incarnations.
+
+    on_step feeds timings through CheckpointSession.observe_step (straggler
+    advice escalates into a preemption request whose migration record
+    pre-plans the shrunken fleet); on_exit maps a process exit code to the
+    scheduler action — a MigrationTicket exit (85) always reschedules
+    immediately, a crash consults the RestartPolicy backoff."""
+    monitor: "StragglerMonitor"
+    restart: "RestartPolicy"
+    checkpointed_exit_code: int = 85   # EXIT_CHECKPOINTED / PreemptionPolicy
+
+    def on_step(self, session, host_times: list[float]) -> dict:
+        return session.observe_step(host_times)
+
+    def on_exit(self, exit_code: int, *, step: int) -> dict:
+        if exit_code == 0:
+            return {"action": "done"}
+        if exit_code == self.checkpointed_exit_code:
+            # the job checkpointed itself (preemption/straggler/migration):
+            # not a failure — reschedule anywhere, no backoff
+            return {"action": "restart", "backoff_s": 0.0,
+                    "reason": "checkpointed"}
+        return self.restart.on_failure(step)
 
 
 @dataclass

@@ -1,0 +1,272 @@
+"""Behavior of the repro.api service façade: URI tiers, typed request flow,
+capability probing, deprecation shims, and façade/engine equivalence."""
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AsyncPolicy, CheckpointSession, CodecPolicy,
+                       DumpReceipt, DumpRequest, MigrateRequest,
+                       MigrationPolicy, RestoreRequest, RetentionPolicy,
+                       SessionConfig, capabilities)
+from repro.core.storage import MemoryTier, as_tier
+
+from conftest import subprocess_env
+
+
+def small_tree(seed=0, delta=0.0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (32, 16)) + delta,
+                       "b": jnp.zeros((16,))},
+            "opt": {"m": {"w": jnp.zeros((32, 16))}},
+            "step": jnp.asarray(1, jnp.int32)}
+
+
+def trees_equal(a, b):
+    return all(bool(jnp.all(jnp.asarray(x) == jnp.asarray(y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------------------------------------------- URI tier layer
+def test_as_tier_rejects_unknown_scheme():
+    with pytest.raises(ValueError, match="unknown tier URI scheme 's3'"):
+        as_tier("s3://bucket/ckpts")
+    with pytest.raises(ValueError, match="gs"):
+        CheckpointSession("gs://bucket/x")
+
+
+def test_file_uri_and_plain_path_agree(tmp_path):
+    t1 = as_tier(f"file://{tmp_path}/ck")
+    t2 = as_tier(str(tmp_path / "ck"))
+    assert t1.root == t2.root
+
+
+def test_mem_uri_names_one_tier_per_process():
+    a = as_tier("mem://test-roundtrip-name")
+    b = as_tier("mem://test-roundtrip-name")
+    c = as_tier("mem://other")
+    assert a is b and a is not c
+    assert isinstance(a, MemoryTier)
+
+
+def test_mem_tier_dump_restore_round_trip():
+    """The satellite contract: a full dump through one session restores
+    bit-identically through ANOTHER session addressing the same mem:// URI."""
+    tree = small_tree(3)
+    sess = CheckpointSession("mem://rt-test")
+    receipt = sess.dump(DumpRequest(state=tree, step=7))
+    assert receipt.committed and receipt.image_id
+    got, man = CheckpointSession("mem://rt-test").load_latest()
+    assert man["image_id"] == receipt.image_id
+    assert trees_equal(tree, got)
+    as_tier("mem://rt-test").delete("images")   # isolate repeated runs
+    as_tier("mem://rt-test").delete("chunks")
+
+
+# ------------------------------------------------------- typed request flow
+def test_dump_request_validates_mode():
+    with pytest.raises(ValueError, match="mode"):
+        DumpRequest(state={}, step=1, mode="later")
+
+
+def test_typed_methods_reject_untyped_arguments(tmp_path):
+    sess = CheckpointSession(str(tmp_path / "ck"))
+    with pytest.raises(TypeError, match="DumpRequest"):
+        sess.dump({"state": small_tree(), "step": 1})
+    with pytest.raises(TypeError, match="RestoreRequest"):
+        sess.restore("latest")
+    with pytest.raises(TypeError, match="MigrateRequest"):
+        sess.migrate(small_tree())
+
+
+def test_sync_dump_receipt_and_restore_result(tmp_path):
+    tree = small_tree(1)
+    sess = CheckpointSession(SessionConfig(root=str(tmp_path / "ck")))
+    r = sess.dump(DumpRequest(state=tree, step=4))
+    assert isinstance(r, DumpReceipt)
+    assert r.committed and r.mode == "sync" and r.step == 4
+    assert r.stats["chunks"] > 0 and r.duration_s > 0
+
+    res = CheckpointSession(str(tmp_path / "ck")).restore(RestoreRequest())
+    assert res.image_id == r.image_id and res.step == 4
+    assert trees_equal(tree, res.state)
+
+
+def test_async_dump_receipts_arrive_on_wait(tmp_path):
+    sess = CheckpointSession(str(tmp_path / "ck"))
+    pending = sess.dump(DumpRequest(state=small_tree(1), step=1,
+                                    mode="async"))
+    assert not pending.committed and pending.image_id is None
+    sess.dump(DumpRequest(state=small_tree(2), step=2, mode="async"))
+    done = sess.wait()
+    assert [d.step for d in done] == [1, 2]
+    assert all(d.committed and d.image_id and d.stats for d in done)
+    assert sess.wait() == []                       # barrier drained
+
+
+def test_async_disabled_by_policy(tmp_path):
+    sess = CheckpointSession(SessionConfig(
+        root=str(tmp_path / "ck"), async_dumps=AsyncPolicy(enabled=False)))
+    with pytest.raises(RuntimeError, match="AsyncPolicy"):
+        sess.dump(DumpRequest(state=small_tree(), step=1, mode="async"))
+
+
+def test_migrate_ticket_and_digest_verified_restore(tmp_path):
+    tree = small_tree(5)
+    sess = CheckpointSession(SessionConfig(
+        root=str(tmp_path / "ck"),
+        migration=MigrationPolicy(arch="test-arch",
+                                  topology={"host_count": 1, "dp_degree": 1,
+                                            "device_count": 1, "axes": []})))
+    ticket = sess.migrate(MigrateRequest(state=tree, step=9,
+                                         reason="unit-drill"))
+    assert ticket.exit_code == 85 and ticket.step == 9
+    assert ticket.reason == "unit-drill" and ticket.latency_s >= 0
+    res = sess.restore(RestoreRequest())
+    assert res.image_id == ticket.image_id
+    assert res.digest_verified is True
+    assert res.migration.arch == "test-arch"
+    assert trees_equal(tree, res.state)
+
+
+def test_session_context_manager_installs_and_releases_signals(tmp_path):
+    import signal
+    from repro.api import PreemptionPolicy
+    before = signal.getsignal(signal.SIGUSR2)
+    with CheckpointSession(SessionConfig(
+            root=str(tmp_path / "ck"),
+            preemption=PreemptionPolicy(install_signals=True))) as sess:
+        assert signal.getsignal(signal.SIGUSR2) != before
+        assert not sess.should_migrate()
+        sess.handler.request("poke")
+        assert sess.should_migrate()
+    assert signal.getsignal(signal.SIGUSR2) == before
+
+
+def test_shorthand_constructor_and_overrides(tmp_path):
+    sess = CheckpointSession(str(tmp_path / "ck"),
+                             retention=RetentionPolicy(keep_last=7))
+    assert sess.keep_last == 7
+    base = SessionConfig(root=str(tmp_path / "ck2"))
+    sess2 = CheckpointSession(base, serial=True)
+    assert sess2.executor.serial and base.serial is False
+
+
+# ------------------------------------------------------------ codec policy
+def test_codec_policy_compiles_and_rejects_unknown():
+    assert CodecPolicy().to_leaf_policy() is None
+    pol = CodecPolicy(optimizer="delta8").to_leaf_policy()
+    assert pol("opt/m/w") == "delta8" and pol("params/w") == "none"
+    pol2 = CodecPolicy(params="bf16", optimizer="delta8").to_leaf_policy()
+    assert pol2("params/w") == "bf16" and pol2("opt/m/w") == "delta8"
+    custom = CodecPolicy(custom=lambda p: "bf16")
+    assert custom.to_leaf_policy()("anything") == "bf16"
+    with pytest.raises(ValueError, match="unknown codec"):
+        CodecPolicy(optimizer="zstd")
+
+
+def test_codec_policy_delta8_round_trip(tmp_path):
+    sess = CheckpointSession(SessionConfig(
+        root=str(tmp_path / "ck"), codec=CodecPolicy(optimizer="delta8"),
+        retention=RetentionPolicy(keep_last=10)))
+    t1 = small_tree(1)
+    sess.dump(DumpRequest(state=t1, step=1))
+    t2 = jax.tree.map(lambda x: x + 0.01, t1)
+    r2 = sess.dump(DumpRequest(state=t2, step=2))
+    got, _ = sess.load_latest()
+    # delta8 on optimizer moments is lossy-bounded; params stay bitwise
+    assert trees_equal(t2["params"], got["params"])
+    np.testing.assert_allclose(np.asarray(got["opt"]["m"]["w"]),
+                               np.asarray(t2["opt"]["m"]["w"]), atol=1e-2)
+    man = sess.registry.images()
+    assert man[-1]["image_id"] == r2.image_id
+    from repro.core.restore import read_manifest
+    leaves = read_manifest(sess.tier, r2.image_id)["leaves"]
+    applied = {r["path"]: r for r in leaves if r["codec"] == "delta8"
+               and r["codec_meta"].get("applied")}
+    assert "opt/m/w" in applied and "params/w" not in applied
+
+
+# ------------------------------------------------------------- capabilities
+def test_capabilities_report_covers_table1_and_lookups():
+    rep = capabilities()
+    rows = rep.table1_rows()
+    assert [c.paper_row for c in rows] == list(range(1, 11))
+    assert rep.supported("serial_dump_restore")
+    assert rep["mem_tier"].name == "mem_tier"
+    with pytest.raises(KeyError):
+        rep["not_a_capability"]
+    assert "| capability |" in rep.markdown()
+
+
+def test_session_capabilities_reflect_config(tmp_path):
+    serial = CheckpointSession(SessionConfig(root=str(tmp_path / "ck"),
+                                             serial=True))
+    rep = serial.capabilities()
+    assert not rep.supported("async_lanes")
+    assert not rep.supported("pipelined_engine")
+    rep2 = CheckpointSession(str(tmp_path / "ck2")).capabilities()
+    assert rep2.supported("async_lanes")
+
+
+# ------------------------------------------------------- deprecation shims
+def test_legacy_facades_warn_and_delegate(tmp_path):
+    from repro.core import AsyncCheckpointer, Checkpointer
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ck = Checkpointer(str(tmp_path / "ck"), keep_last=5)
+        AsyncCheckpointer(str(tmp_path / "ck2"))
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, DeprecationWarning)]
+    assert any("Checkpointer is deprecated" in m for m in msgs)
+    assert any("AsyncCheckpointer is deprecated" in m for m in msgs)
+    # the shim IS a session: one engine, one implementation
+    assert isinstance(ck, CheckpointSession)
+    assert ck.keep_last == 5
+
+    tree = small_tree(2)
+    out = ck.save(tree, step=3)                    # legacy dict protocol
+    assert set(out) >= {"image_id", "stats"}
+    res = CheckpointSession(str(tmp_path / "ck")).restore(RestoreRequest())
+    assert res.image_id == out["image_id"]
+    assert trees_equal(tree, res.state)
+    # legacy wait() keeps returning raw dicts, not receipts
+    ck.save_async(tree, step=4)
+    raw = ck.wait()
+    assert isinstance(raw[0], dict) and raw[0]["image_id"]
+
+
+def test_importing_api_emits_no_deprecation_warning():
+    out = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro.api, repro.core"],
+        env=subprocess_env(), capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_core_reexports_api_names_once():
+    import repro.api
+    import repro.core
+    assert repro.core.CheckpointSession is repro.api.CheckpointSession
+    assert repro.core.SessionConfig is repro.api.SessionConfig
+    assert repro.core.DumpRequest is repro.api.DumpRequest
+    with pytest.raises(AttributeError):
+        repro.core.not_a_name  # noqa: B018
+
+
+# --------------------------------------------------------- fleet policies
+def test_fleet_policy_maps_exit_codes():
+    from repro.training.fault_tolerance import (FleetPolicy, RestartPolicy,
+                                                StragglerMonitor)
+    fp = FleetPolicy(monitor=StragglerMonitor(num_hosts=2),
+                     restart=RestartPolicy(max_retries=2,
+                                           backoff_base_s=1.0))
+    assert fp.on_exit(0, step=10) == {"action": "done"}
+    resched = fp.on_exit(85, step=10)
+    assert resched["action"] == "restart" and resched["backoff_s"] == 0.0
+    crash = fp.on_exit(1, step=10)
+    assert crash["action"] == "restart" and crash["backoff_s"] == 1.0

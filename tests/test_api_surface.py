@@ -1,0 +1,115 @@
+"""Public-API snapshot: repro.api is versioned surface. This test inventories
+__all__, the dataclass fields of every request/response/config object, and
+the signatures of CheckpointSession's public methods, so an accidental
+rename / removal / reorder fails CI instead of breaking callers. Additive
+changes are fine: extend the snapshot in the same PR that extends the API
+(and bump API_VERSION on anything non-additive)."""
+import dataclasses
+import inspect
+
+import repro.api as api
+
+EXPECTED_ALL = {
+    "API_VERSION",
+    "CheckpointSession",
+    "SessionConfig", "RetentionPolicy", "CodecPolicy", "AsyncPolicy",
+    "PreemptionPolicy", "MigrationPolicy",
+    "DumpRequest", "DumpReceipt",
+    "RestoreRequest", "RestoreResult",
+    "MigrateRequest", "MigrationTicket",
+    "capabilities", "Capability", "CapabilityReport", "TABLE1",
+}
+
+# dataclass -> ordered field names (order matters: positional construction)
+EXPECTED_FIELDS = {
+    "SessionConfig": ["root", "replicas", "retention", "codec",
+                      "async_dumps", "preemption", "migration",
+                      "chunk_bytes", "serial", "executor"],
+    "RetentionPolicy": ["keep_last", "keep_every"],
+    "CodecPolicy": ["params", "optimizer", "incremental", "custom"],
+    "AsyncPolicy": ["enabled", "max_pending"],
+    "PreemptionPolicy": ["install_signals", "signals", "exit_code"],
+    "MigrationPolicy": ["arch", "topology", "mesh", "monitor", "restart",
+                        "verify_digest"],
+    "DumpRequest": ["state", "step", "meta", "topology", "mode"],
+    "DumpReceipt": ["step", "mode", "committed", "image_id", "stats",
+                    "duration_s"],
+    "RestoreRequest": ["image_id", "target_struct", "shardings", "mesh",
+                       "host_count", "dp_degree", "global_batch",
+                       "verify_digest", "allow_env_mismatch"],
+    "RestoreResult": ["state", "image_id", "step", "manifest", "migration",
+                      "topology_changed", "changes", "host_count",
+                      "dp_degree", "data", "digest_verified", "report"],
+    "MigrateRequest": ["state", "iterator", "step", "data_state", "rng",
+                       "meta_extra", "opt_cfg", "reason"],
+    "MigrationTicket": ["exit_code", "image_id", "step", "reason",
+                        "latency_s", "record"],
+    "Capability": ["name", "supported", "detail", "paper_row",
+                   "paper_name", "paper_verdict"],
+    "CapabilityReport": ["env", "capabilities"],
+}
+
+# CheckpointSession public methods -> parameter names (after self)
+EXPECTED_SESSION_METHODS = {
+    "dump": ["request"],
+    "restore": ["request"],
+    "migrate": ["request"],
+    "wait": [],
+    "plan": ["tree_or_abstract", "step"],
+    "save": ["tree", "step", "meta", "topology"],
+    "save_async": ["tree", "step", "meta", "topology"],
+    "load": ["image_id", "target_struct", "shardings"],
+    "load_latest": ["target_struct", "shardings"],
+    "should_migrate": [],
+    "observe_step": ["host_times"],
+    "capabilities": [],
+    "close": ["drain"],
+    "__enter__": [],
+    "__exit__": ["exc_type", "exc", "tb"],
+}
+
+
+def test_all_is_exactly_the_published_surface():
+    assert set(api.__all__) == EXPECTED_ALL
+    for name in api.__all__:
+        assert hasattr(api, name), f"__all__ names missing object: {name}"
+    assert api.API_VERSION == 1
+
+
+def test_dataclass_fields_are_stable():
+    for cls_name, want in EXPECTED_FIELDS.items():
+        cls = getattr(api, cls_name)
+        assert dataclasses.is_dataclass(cls), cls_name
+        got = [f.name for f in dataclasses.fields(cls)]
+        assert got == want, f"{cls_name} fields changed: {got} != {want}"
+
+
+def test_requests_and_policies_are_frozen():
+    for cls_name in ("SessionConfig", "RetentionPolicy", "CodecPolicy",
+                     "AsyncPolicy", "PreemptionPolicy", "MigrationPolicy",
+                     "DumpRequest", "DumpReceipt", "RestoreRequest",
+                     "MigrateRequest", "MigrationTicket", "Capability"):
+        cls = getattr(api, cls_name)
+        assert cls.__dataclass_params__.frozen, f"{cls_name} must be frozen"
+
+
+def test_session_method_signatures_are_stable():
+    for meth, want in EXPECTED_SESSION_METHODS.items():
+        fn = getattr(api.CheckpointSession, meth)
+        params = [p for p in inspect.signature(fn).parameters
+                  if p != "self"]
+        assert params == want, \
+            f"CheckpointSession.{meth} signature changed: {params} != {want}"
+
+
+def test_session_constructor_takes_config_and_overrides():
+    params = list(inspect.signature(
+        api.CheckpointSession.__init__).parameters)
+    assert params == ["self", "config", "overrides"]
+
+
+def test_table1_covers_all_ten_paper_rows():
+    assert sorted(api.TABLE1) == list(range(1, 11))
+    for row, entry in api.TABLE1.items():
+        name, verdict, cap = entry
+        assert isinstance(name, str) and isinstance(cap, str), row
