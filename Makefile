@@ -1,8 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test lint api-check bench-compare bench-smoke bench-facade \
-	bench-migration run-example
+.PHONY: check test lint api-check docs-check bench-compare bench-smoke \
+	bench-facade bench-migration bench-stw run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -13,6 +13,13 @@ check:
 api-check:
 	python -m pytest -q tests/test_api_surface.py
 	python -W error::DeprecationWarning -c "import repro.api, repro.core"
+
+# docs gate: capability-doc sync + public-docstring + markdown link
+# checker (tests/test_docs.py), then the `criu check` CLI's paper-row
+# regression exit code (non-zero if any Table-1 row stops probing green)
+docs-check:
+	python -m pytest -q tests/test_docs.py
+	python -m repro.api.capabilities --markdown
 
 # full tier-1 suite (~8 min)
 test:
@@ -38,6 +45,11 @@ bench-facade:
 # preempt->exit-85 and restore-on-new-topology latency
 bench-migration:
 	python benchmarks/migration_latency.py
+
+# stop-the-world window: monolithic dump vs pre-dump residual (strict:
+# the pre-copy freeze must be strictly smaller; restores bit-identical)
+bench-stw:
+	python benchmarks/stop_the_world.py
 
 # run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
 run-example:

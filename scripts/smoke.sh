@@ -10,4 +10,5 @@ exec python -m pytest -q \
     tests/test_checkpoint_pipeline.py \
     tests/test_checkpoint_properties.py \
     tests/test_api_session.py \
+    tests/test_predump_lazy.py \
     "$@"

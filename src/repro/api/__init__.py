@@ -11,12 +11,15 @@ storage tiers, typed request/response pairs, and an environment probe:
     cfg = SessionConfig(root="file:///ckpts/run17",
                         replicas=("mem://hot",),
                         codec=CodecPolicy(optimizer="delta8"),
-                        preemption=PreemptionPolicy(install_signals=True))
+                        preemption=PreemptionPolicy(install_signals=True),
+                        migration=MigrationPolicy(predump_rounds=2))
     with CheckpointSession(cfg) as sess:
         sess.dump(DumpRequest(state=state, step=s, meta=meta,
                               mode="async"))
         ...
-        if sess.should_migrate():                  # SIGTERM / straggler
+        if sess.should_predump():                  # pre-copy window open
+            sess.pre_dump_round(state)             # stream, keep training
+        elif sess.should_migrate():                # SIGTERM / straggler
             ticket = sess.migrate(MigrateRequest(state=state, iterator=it))
             sys.exit(ticket.exit_code)             # 85: reschedule me
 
@@ -25,10 +28,17 @@ storage tiers, typed request/response pairs, and an environment probe:
         target_struct=struct, host_count=2, dp_degree=2))
     state, it = res.state, res.make_iterator(dataset)
 
+    # or post-copy: skeleton now, leaves stream behind first access
+    res = CheckpointSession(cfg).restore(RestoreRequest(lazy=True))
+    res.state["params"]; res.state.materialize()
+
     capabilities()            # `criu check`: what does THIS env support?
 
 Everything here is stable, versioned surface (tests/test_api_surface.py
-snapshots names and signatures). The legacy facades in repro.core
+snapshots names and signatures; ``API_VERSION`` is bumped on any
+non-additive change). ``TABLE1`` is the paper's Table-1 row registry —
+the single source the capability probes, the reproduction benchmark and
+docs/capabilities.md all derive from. The legacy facades in repro.core
 (Checkpointer, AsyncCheckpointer) are deprecation shims over a session;
 DESIGN.md §7 maps old names to new."""
 from __future__ import annotations

@@ -27,7 +27,14 @@ CODEC_NAMES = ("none", "bf16", "delta8")
 class RetentionPolicy:
     """Which images survive: the newest ``keep_last`` plus every step
     multiple of ``keep_every`` (0 disables); delta-chain parents of kept
-    images are always pinned."""
+    images are always pinned, and an in-progress pre-dump chain is never
+    counted against ``keep_last``.
+
+    Example::
+
+        RetentionPolicy(keep_last=5, keep_every=1000)   # 5 newest +
+        #                                                 every 1000th step
+    """
     keep_last: int = 3
     keep_every: int = 0
 
@@ -38,7 +45,14 @@ class CodecPolicy:
     the two halves of a train state (params stay lossless by default;
     optimizer moments may opt into delta8/bf16); ``custom`` is an explicit
     path->codec callable that overrides both. ``incremental`` links parent
-    images (chunk dedup + delta8 chains)."""
+    images (chunk dedup + delta8 chains).
+
+    Example::
+
+        CodecPolicy(optimizer="delta8")        # params lossless, moments
+        #                                        int8-delta vs parent image
+        CodecPolicy(custom=lambda p: "bf16" if "/v/" in p else "none")
+    """
     params: str = "none"
     optimizer: str = "none"
     incremental: bool = True
@@ -75,7 +89,13 @@ class CodecPolicy:
 class AsyncPolicy:
     """Async dump lane: DumpRequest(mode="async") capture-and-go semantics.
     ``max_pending`` bounds how many captured host trees may be alive at
-    once (memory backpressure)."""
+    once (memory backpressure).
+
+    Example::
+
+        AsyncPolicy(max_pending=1)    # at most one captured tree in RAM;
+        #                               a second async dump blocks at capture
+    """
     enabled: bool = True
     max_pending: int = 2
 
@@ -86,7 +106,13 @@ class PreemptionPolicy:
     (as a context manager) installs handlers that flag — never dump — on
     the listed signals; the training loop polls should_migrate() at step
     boundaries. ``exit_code`` is what MigrationTicket carries (85 =
-    HTCondor self-checkpoint)."""
+    HTCondor self-checkpoint).
+
+    Example::
+
+        PreemptionPolicy(install_signals=True)   # SIGTERM/SIGUSR2 -> flag
+        #                                          -> boundary dump -> 85
+    """
     install_signals: bool = False
     signals: tuple = (_signal.SIGTERM, _signal.SIGUSR2)
     exit_code: int = 85
@@ -99,13 +125,25 @@ class MigrationPolicy:
     (a training.fault_tolerance.StragglerMonitor) makes observe_step()
     escalate persistent stragglers into preemption requests; ``restart``
     (a RestartPolicy) is consulted by launchers between incarnations;
-    ``verify_digest`` gates restore-side bit-identity verification."""
+    ``verify_digest`` gates restore-side bit-identity verification.
+    ``predump_rounds`` enables iterative pre-copy on the way out: after a
+    preemption signal, session.should_predump() stays true for this many
+    step boundaries — the loop runs pre_dump_round() each time and keeps
+    training — before migrate()'s final freeze, which then writes only
+    the residual dirty set.
+
+    Example::
+
+        MigrationPolicy(arch="qwen3-8b", predump_rounds=2,
+                        monitor=StragglerMonitor(num_hosts=4))
+    """
     arch: str = ""
     topology: dict | None = None
     mesh: Any = None
     monitor: Any = None               # StragglerMonitor
     restart: Any = None               # RestartPolicy
     verify_digest: bool = True
+    predump_rounds: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +153,17 @@ class SessionConfig:
     root/replicas: URI-addressed tiers (file://, mem://, plain path, or
     Tier objects). chunk_bytes: chunk window override. serial: run the
     single-threaded baseline engine. executor: share a CheckpointExecutor
-    across sessions (defaults to the process-wide pipelined engine)."""
+    across sessions (defaults to the process-wide pipelined engine).
+
+    Example::
+
+        SessionConfig(root="file:///ckpts/run17",
+                      replicas=("mem://hot", "/mnt/mirror"),
+                      codec=CodecPolicy(optimizer="delta8"),
+                      preemption=PreemptionPolicy(install_signals=True),
+                      migration=MigrationPolicy(arch="qwen3-8b",
+                                                predump_rounds=2))
+    """
     root: Any
     replicas: tuple = ()
     retention: RetentionPolicy = dataclasses.field(

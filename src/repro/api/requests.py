@@ -23,24 +23,43 @@ class DumpRequest:
 
     mode: "sync" blocks until the image is durable; "async" captures the
     device state synchronously (the step barrier) and returns immediately —
-    the receipt is pending until CheckpointSession.wait()."""
+    the receipt is pending until CheckpointSession.wait(); "pre_dump" runs
+    one iterative pre-copy round (CRIU `criu pre-dump`): a complete,
+    restorable image written while training continues, paying only for
+    leaves dirtied since the previous round, so the *next* sync dump's
+    stop-the-world window shrinks to the residual dirty set.
+
+    Example::
+
+        sess.dump(DumpRequest(state=state, step=s, mode="pre_dump"))
+        ...                                    # more training steps
+        sess.dump(DumpRequest(state=state, step=s2))   # residual dump
+    """
     state: Any
     step: int
     meta: dict | None = None
     topology: dict | None = None
-    mode: str = "sync"                    # "sync" | "async"
+    mode: str = "sync"                    # "sync" | "async" | "pre_dump"
 
     def __post_init__(self):
-        if self.mode not in ("sync", "async"):
-            raise ValueError(f"DumpRequest.mode must be 'sync' or 'async', "
-                             f"got {self.mode!r}")
+        if self.mode not in ("sync", "async", "pre_dump"):
+            raise ValueError(f"DumpRequest.mode must be 'sync', 'async' or "
+                             f"'pre_dump', got {self.mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)
 class DumpReceipt:
     """Proof of a dump. ``committed`` is False for an async request that has
     been captured+enqueued but not yet waited on (image_id/stats arrive with
-    the receipts returned by CheckpointSession.wait())."""
+    the receipts returned by CheckpointSession.wait()).
+
+    Example::
+
+        r = sess.dump(DumpRequest(state=state, step=s, mode="async"))
+        assert not r.committed
+        (r2,) = sess.wait()                # now durable
+        print(r2.image_id, r2.stats["bytes_stored"])
+    """
     step: int
     mode: str
     committed: bool
@@ -60,7 +79,25 @@ class RestoreRequest:
     the new mesh. host_count/dp_degree/global_batch: the topology the job
     is restarting on (None keeps the dumped — or straggler-planned —
     value). verify_digest: check the recorded logical-state digest against
-    the decoded bytes before any device placement."""
+    the decoded bytes before any device placement.
+
+    lazy: post-copy restore (CRIU lazy-pages). The result materializes the
+    model *skeleton* immediately; leaf bytes are served on first access by
+    a LeafServer over the chunk index (``result.state[...]`` faults leaves
+    in; ``result.state.materialize()`` forces the rest). Chunk hashes are
+    still verified per read, but the whole-tree digest check is deferred
+    to full materialization, and shardings/target-dtype casts apply only
+    as leaves arrive. prefetch_order: path prefixes to stream in the
+    background first (default: the restore plan's own hint — params before
+    optimizer state).
+
+    Example::
+
+        res = sess.restore(RestoreRequest(lazy=True,
+                                          prefetch_order=("params",)))
+        logits = model.apply(res.state["params"], x)   # faults params in
+        res.state.materialize()                        # the rest, eagerly
+    """
     image_id: str | None = None
     target_struct: Any = None
     shardings: Any = None
@@ -70,13 +107,27 @@ class RestoreRequest:
     global_batch: int | None = None
     verify_digest: bool = True
     allow_env_mismatch: bool = True
+    lazy: bool = False
+    prefetch_order: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class RestoreResult:
     """The restored state plus everything the next incarnation needs: the
     migration record, the topology-change plan, and the remapped data
-    cursor. Wraps core.migration.ResumeReport (kept at ``report``)."""
+    cursor. Wraps core.migration.ResumeReport (kept at ``report``).
+
+    When ``lazy`` is True, ``state`` is a core.lazy.LazyState: the tree
+    skeleton exists now, leaf bytes arrive on first access (or from the
+    background prefetcher) — call ``state.materialize()`` for a plain
+    nested dict.
+
+    Example::
+
+        res = sess.restore(RestoreRequest(host_count=2, dp_degree=2))
+        state, it = res.state, res.make_iterator(dataset)
+        assert res.digest_verified is not False
+    """
     state: Any
     image_id: str
     step: int
@@ -89,6 +140,7 @@ class RestoreResult:
     data: dict
     digest_verified: bool | None      # None: image predates digests
     report: Any = None                # the underlying ResumeReport
+    lazy: bool = False                # state is a LazyState (post-copy)
 
     def make_iterator(self, ds, *, dp_rank: int = 0, dp_size: int = 1,
                       prefetch: int = 2):
@@ -107,7 +159,14 @@ class MigrateRequest:
 
     state: the device pytree to dump. iterator: the live data iterator
     (quiesced and cursor-captured). reason: recorded in the migration
-    manifest when no signal/escalation already set one."""
+    manifest when no signal/escalation already set one.
+
+    Example::
+
+        if sess.should_migrate():
+            ticket = sess.migrate(MigrateRequest(state=state, iterator=it))
+            sys.exit(ticket.exit_code)
+    """
     state: Any
     iterator: Any = None
     step: int | None = None
@@ -123,7 +182,15 @@ class MigrationTicket:
     """The dump side's half of a migration: the image is durable, the
     process should exit with ``exit_code`` (85, HTCondor's self-checkpoint
     convention) and the next incarnation resumes from ``image_id`` on
-    whatever topology it gets."""
+    whatever topology it gets.
+
+    Example::
+
+        ticket = sess.migrate(MigrateRequest(state=state))
+        log.info("image %s durable in %.2fs", ticket.image_id,
+                 ticket.latency_s)
+        sys.exit(ticket.exit_code)          # 85: reschedule me anywhere
+    """
     exit_code: int
     image_id: str
     step: int

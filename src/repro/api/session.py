@@ -52,7 +52,19 @@ def _step_of(image_id: str) -> int | None:
 
 
 class CheckpointSession:
-    """Typed facade over the plan/execute engine (see module docstring)."""
+    """Typed facade over the plan/execute engine (see module docstring).
+
+    Example::
+
+        with CheckpointSession(SessionConfig(root="file:///ckpts")) as s:
+            s.dump(DumpRequest(state=state, step=1))
+            if s.should_predump():
+                s.pre_dump_round(state)          # pre-copy, keep training
+            elif s.should_migrate():
+                sys.exit(s.migrate(MigrateRequest(state=state)).exit_code)
+        res = CheckpointSession("file:///ckpts").restore(
+            RestoreRequest(lazy=True))           # post-copy resume
+    """
 
     def __init__(self, config: SessionConfig | str, **overrides):
         """``config`` is a SessionConfig, or a root tier reference (URI,
@@ -81,6 +93,8 @@ class CheckpointSession:
         self._drained = []      # async results consumed by sync-save drains
         self._prev_host = None  # for delta8 chains
         self._prev_step = None  # step whose image _prev_host belongs to
+        self._prev_image = None  # image id _prev_host is the content of
+        self._tracker = None    # lazy DirtyLeafTracker (pre-dump rounds)
         self._orch = None       # lazy MigrationOrchestrator
         self._installed = False
         self._closed = False
@@ -96,7 +110,8 @@ class CheckpointSession:
                 handler=PreemptionHandler(
                     signals=self.config.preemption.signals),
                 monitor=mig.monitor, arch=mig.arch, mesh=mig.mesh,
-                topology=mig.topology)
+                topology=mig.topology,
+                predump_rounds=mig.predump_rounds)
         return self._orch
 
     @property
@@ -130,12 +145,29 @@ class CheckpointSession:
     # ------------------------------------------------------- typed requests
     def dump(self, request: DumpRequest) -> DumpReceipt:
         """DumpRequest -> DumpReceipt. mode="async" returns an uncommitted
-        receipt; the committed ones come back from wait()."""
+        receipt; the committed ones come back from wait(). mode="pre_dump"
+        runs one iterative pre-copy round (see pre_dump()) and returns a
+        committed receipt whose stats carry the dirty/clean split.
+
+        Example::
+
+            sess.dump(DumpRequest(state=state, step=s, mode="pre_dump"))
+            ...                       # training continues, state drifts
+            sess.dump(DumpRequest(state=state, step=s2))   # residual only
+        """
         if not isinstance(request, DumpRequest):
             raise TypeError(f"dump() takes a DumpRequest, got "
                             f"{type(request).__name__} — build one, or use "
                             f"the legacy save() shim")
         t0 = time.monotonic()
+        if request.mode == "pre_dump":
+            out = self.pre_dump(request.state, step=request.step,
+                                meta=request.meta,
+                                topology=request.topology)
+            return DumpReceipt(step=int(request.step), mode="pre_dump",
+                               committed=True, image_id=out["image_id"],
+                               stats=out["stats"],
+                               duration_s=time.monotonic() - t0)
         if request.mode == "async":
             if not self.config.async_dumps.enabled:
                 raise RuntimeError("async dumps are disabled by this "
@@ -176,14 +208,16 @@ class CheckpointSession:
                      replicas=self.replicas, executor=self.executor,
                      verify_digest=(req.verify_digest
                                     and self.config.migration.verify_digest),
-                     allow_env_mismatch=req.allow_env_mismatch)
+                     allow_env_mismatch=req.allow_env_mismatch,
+                     lazy=req.lazy, prefetch_order=req.prefetch_order)
         return RestoreResult(
             state=rep.state, image_id=rep.manifest["image_id"],
             step=int(rep.migration.step), manifest=rep.manifest,
             migration=rep.migration, topology_changed=rep.topology_changed,
             changes=rep.changes, host_count=rep.host_count,
             dp_degree=rep.dp_degree, data=rep.data,
-            digest_verified=rep.digest_verified, report=rep)
+            digest_verified=rep.digest_verified, report=rep,
+            lazy=req.lazy)
 
     def migrate(self, request: MigrateRequest) -> MigrationTicket:
         """MigrateRequest -> MigrationTicket: quiesce -> drain -> dump with
@@ -214,6 +248,27 @@ class CheckpointSession:
         signal handler.)"""
         return self._orchestrator().should_migrate()
 
+    def should_predump(self) -> bool:
+        """True while a preemption is pending and MigrationPolicy's
+        pre-copy budget (``predump_rounds``) has rounds left: run
+        pre_dump_round() and keep training instead of migrating yet.
+
+        Example::
+
+            if sess.should_predump():
+                sess.pre_dump_round(state)       # stream, keep stepping
+            elif sess.should_migrate():
+                ticket = sess.migrate(MigrateRequest(state=state))
+                sys.exit(ticket.exit_code)       # residual freeze only
+        """
+        return self._orchestrator().should_predump()
+
+    def pre_dump_round(self, state, *, step: int | None = None) -> dict:
+        """One orchestrated pre-copy round on the way to migration
+        (counts against MigrationPolicy.predump_rounds; the bare engine
+        entry point is pre_dump())."""
+        return self._orchestrator().pre_dump_round(state, step=step)
+
     def observe_step(self, host_times) -> dict:
         """Feed per-host step times to the straggler policy (configured via
         MigrationPolicy.monitor); persistent stragglers escalate into a
@@ -237,7 +292,8 @@ class CheckpointSession:
             prev_host = None
         elif with_parent:
             parent, prev_host = self.registry.resolve_parent_baseline(
-                self._prev_step, prev_host, step)
+                self._prev_step, prev_host, step,
+                baseline_image=self._prev_image)
         kw = dict(step=step, meta=meta or {}, parent=parent,
                   codec_policy=self.codec_policy,
                   prev_host_tree=prev_host, topology=topology or {})
@@ -245,8 +301,29 @@ class CheckpointSession:
             kw["chunk_bytes"] = self.chunk_bytes
         return kw
 
+    def _classify(self, host):
+        """(reuse_records, digests) from the dirty tracker — ({}, None)
+        when no pre-dump round has warmed it, so sessions that never
+        pre-dump pay nothing for the machinery."""
+        if self._tracker is None or not self._tracker.warm:
+            return {}, None
+        from repro.core.predump import digest_pairs
+        digests = digest_pairs(flatten_with_paths(host),
+                               executor=self.executor)
+        return self._tracker.reuse_for(digests), digests
+
     def save(self, tree, *, step: int, meta: dict | None = None,
              topology: dict | None = None) -> dict:
+        """Raw-dict sync dump (the engine under DumpRequest(mode="sync")):
+        blocks until the image is durable, returns {"image_id", "stats",
+        "records"}. After pre-dump rounds this is automatically the
+        residual dump — digest-unchanged leaves re-emit cached records.
+
+        Example::
+
+            out = sess.save(state, step=7)
+            print(out["image_id"], out["stats"]["bytes_stored"])
+        """
         if self._async is not None:
             # drain in-flight async dumps first: the submit-time parent
             # scan must see them committed (causal chain), and retain/gc
@@ -256,18 +333,96 @@ class CheckpointSession:
             # caller
             self._drained.extend(self._async.wait())
         host = jax.device_get(tree)   # one capture, shared with the baseline
+        # residual-dump path: after pre-dump rounds, digest-unchanged
+        # leaves re-emit their cached records — the freeze window pays
+        # only for the dirty set (plus the classification pass itself)
+        reuse, digests = self._classify(host)
         out = _dump(host, self.tier, replicas=self.replicas,
-                    executor=self.executor,
+                    executor=self.executor, reuse_records=reuse,
                     **self._save_kw(step, meta, topology))
         if self.codec_policy is not None and self.incremental:
             self._prev_host = host_tree_by_path(host)
             self._prev_step = step
+            self._prev_image = out["image_id"]
+        if digests is not None:
+            self._tracker.update(digests, out["records"], out["image_id"],
+                                 pre_dump=False)
         self.registry.retain(self.keep_last, self.keep_every)
         self.registry.gc()
         return out
 
+    def pre_dump(self, tree, *, step: int, meta: dict | None = None,
+                 topology: dict | None = None) -> dict:
+        """One iterative pre-copy round (CRIU `criu pre-dump`): commit a
+        complete, restorable image of the current state while training
+        goes on, writing only leaves dirtied since the previous round.
+        The dirty tracker remembers this round's records, so the *final*
+        dump at the step boundary (an ordinary save()/DumpRequest) writes
+        only the residual dirty set — that is the stop-the-world window
+        this call exists to shrink.
+
+        Returns {"image_id", "stats", "records"}; stats carry
+        ``leaves_dirty``/``leaves_clean``/``predump_round``. Rounds never
+        delta8-encode (a reused record must decode parent-free — see
+        core/predump.py), but they do advance the session's delta8
+        baseline so the final dump's dirty leaves delta against the last
+        round's image."""
+        from repro.core.predump import (PRE_DUMP_META_KEY, DirtyLeafTracker,
+                                        digest_pairs)
+        if self._tracker is None:
+            self._tracker = DirtyLeafTracker()
+        if self._async is not None:
+            self._drained.extend(self._async.wait())   # causal parents
+        host = jax.device_get(tree)
+        pairs = flatten_with_paths(host)
+        digests = digest_pairs(pairs, executor=self.executor)
+        reuse = self._tracker.reuse_for(digests)
+        latest = self.registry.latest()
+        parent = latest["image_id"] if latest else None
+        rnd = self._tracker.rounds
+        existing = set(self.tier.image_ids())
+        image_id = f"step_{int(step):010d}p{rnd:02d}"
+        while image_id in existing:   # a foreign session's round at this
+            rnd += 1                  # step: never overwrite an image a
+            image_id = f"step_{int(step):010d}p{rnd:02d}"   # delta child
+            #                           may decode through
+        kw = dict(step=step, parent=parent, topology=topology or {},
+                  codec_policy=self.codec_policy, prev_host_tree=None,
+                  meta={**(meta or {}),
+                        PRE_DUMP_META_KEY: {
+                            "round": rnd,
+                            "dirty": len(pairs) - len(reuse),
+                            "clean": len(reuse)}})
+        if self.chunk_bytes:
+            kw["chunk_bytes"] = self.chunk_bytes
+        out = _dump(host, self.tier, replicas=self.replicas,
+                    executor=self.executor, image_id=image_id,
+                    reuse_records=reuse, **kw)
+        self._tracker.update(digests, out["records"], out["image_id"],
+                             pre_dump=True)
+        if self.codec_policy is not None and self.incremental:
+            self._prev_host = host_tree_by_path(host)
+            self._prev_step = step
+            self._prev_image = out["image_id"]
+        self.registry.retain(self.keep_last, self.keep_every)
+        self.registry.gc()
+        out["stats"]["predump_round"] = rnd
+        out["stats"]["leaves_dirty"] = len(pairs) - len(reuse)
+        out["stats"]["leaves_clean"] = len(reuse)
+        return out
+
     def save_async(self, tree, *, step: int, meta: dict | None = None,
                    topology: dict | None = None):
+        """Raw-dict async dump (the engine under DumpRequest(mode=
+        "async")): captures device state now, writes in the background on
+        the ordered lane; wait() is the durability barrier.
+
+        Example::
+
+            sess.save_async(state, step=7)   # returns at capture
+            ...                              # training continues
+            sess.wait()                      # durable (or raises)
+        """
         if self._async is None:
             self._async = _AsyncEngine(
                 self.tier, replicas=self.replicas,
@@ -278,6 +433,7 @@ class CheckpointSession:
         # the step and miss still-in-flight parents)
         kw = self._save_kw(step, meta, topology, with_parent=False)
         baseline_step = self._prev_step
+        baseline_image = self._prev_image
         host = jax.device_get(tree)   # one capture: the job's input and
         #                               the next call's delta baseline
         if self.codec_policy is not None and self.incremental:
@@ -287,8 +443,10 @@ class CheckpointSession:
             # next call's baseline becomes this tree
             self._prev_host = host_tree_by_path(host)
             self._prev_step = step
+            self._prev_image = f"step_{int(step):010d}"  # dump()'s default
         self._async.dump_async(host, resolve_parent=self.incremental,
-                               baseline_step=baseline_step, **kw)
+                               baseline_step=baseline_step,
+                               baseline_image=baseline_image, **kw)
 
     def _wait_raw(self) -> list:
         if self._async is not None:
@@ -310,11 +468,24 @@ class CheckpointSession:
 
     # --------------------------------------------------------- engine: load
     def load_latest(self, target_struct=None, shardings=None):
+        """Raw restore of the newest image -> (tree, manifest). The typed
+        path (RestoreRequest) adds migration/topology handling on top.
+
+        Example::
+
+            tree, man = sess.load_latest(target_struct=struct)
+        """
         return _restore(self.tier, target_struct=target_struct,
                         shardings=shardings, replicas=self.replicas,
                         executor=self.executor)
 
     def load(self, image_id: str, target_struct=None, shardings=None):
+        """Raw restore of a specific image id -> (tree, manifest).
+
+        Example::
+
+            tree, man = sess.load("step_0000000040")
+        """
         return _restore(self.tier, image_id, target_struct=target_struct,
                         shardings=shardings, replicas=self.replicas,
                         executor=self.executor)

@@ -30,8 +30,10 @@ from repro.core.compression import default_policy
 from repro.core.dump import dump, flatten_with_paths, host_tree_by_path
 from repro.core.executor import CheckpointExecutor, get_default_executor
 from repro.core.integrity import CorruptionError, tree_digest
+from repro.core.lazy import LazyState, LeafServer, lazy_restore
 from repro.core.migration import (MigrationManifest, MigrationOrchestrator,
                                   ResumeReport, resume)
+from repro.core.predump import DirtyLeafTracker, leaf_digest
 from repro.core.plan import (DumpPlan, LeafPlan, RestorePlan, plan_dump,
                              plan_restore)
 from repro.core.preempt import EXIT_CHECKPOINTED, PreemptionHandler

@@ -36,7 +36,8 @@ class AsyncCheckpointer:
         self._slots = threading.Semaphore(max_pending)
 
     def dump_async(self, tree, *, resolve_parent: bool = False,
-                   baseline_step: int | None = None, **kw):
+                   baseline_step: int | None = None,
+                   baseline_image: str | None = None, **kw):
         """Synchronously captures (device_get) then submits the write job.
         Blocks only if max_pending dumps are already in flight.
 
@@ -45,12 +46,13 @@ class AsyncCheckpointer:
         at submit time — submit-time resolution would miss still-in-flight
         parents and break the chain.
 
-        baseline_step: the step whose image kw's ``prev_host_tree`` is the
-        content of. A delta8 leaf is only valid if it is decoded against
-        the same values it was encoded against, so if the run-time parent
-        is a different image (the baseline's dump failed or its image was
-        reaped) the delta baseline is dropped — full encode beats silent
-        corruption."""
+        baseline_step/baseline_image: the step (and, when the caller
+        tracked one, the image id) whose image kw's ``prev_host_tree`` is
+        the content of. A delta8 leaf is only valid if it is decoded
+        against the same values it was encoded against, so if the run-time
+        parent is a different image (the baseline's dump failed or its
+        image was reaped) the delta baseline is dropped — full encode
+        beats silent corruption."""
         self._slots.acquire()   # blocks while max_pending trees are alive
 
         def job():
@@ -61,7 +63,7 @@ class AsyncCheckpointer:
                         kw["parent"], kw["prev_host_tree"] = \
                             Registry(self.root).resolve_parent_baseline(
                                 baseline_step, kw.get("prev_host_tree"),
-                                kw["step"])
+                                kw["step"], baseline_image=baseline_image)
                     out = _dump_fn(host_tree, self.root,
                                    replicas=self.replicas,
                                    executor=self._ex, **kw)

@@ -43,10 +43,13 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
          replicas=(), topology: dict | None = None,
          chunk_bytes: int = chunking.CHUNK_BYTES,
          process_index: int = 0, num_processes: int = 1,
-         executor: CheckpointExecutor | None = None) -> dict:
-    """Returns {"image_id", "stats"}. ``prev_host_tree`` (path->np array)
-    enables delta8; ``parent`` links the incremental chain. ``executor``
-    defaults to the process-wide pipelined engine."""
+         executor: CheckpointExecutor | None = None,
+         reuse_records: dict | None = None) -> dict:
+    """Returns {"image_id", "stats", "records"}. ``prev_host_tree``
+    (path->np array) enables delta8; ``parent`` links the incremental
+    chain; ``reuse_records`` re-emits cached records for digest-proven
+    unchanged leaves (the pre-dump residual path — see core/predump.py).
+    ``executor`` defaults to the process-wide pipelined engine."""
     tier = as_tier(root)
     replicas = [as_tier(r) for r in replicas]
     ex = executor or get_default_executor()
@@ -57,7 +60,8 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
                      codec_policy=codec_policy,
                      prev_host_tree=prev_host_tree, chunk_bytes=chunk_bytes,
                      process_index=process_index,
-                     num_processes=num_processes)
+                     num_processes=num_processes,
+                     reuse_records=reuse_records)
 
     arrays = {p: np.asarray(a) for p, a in leaves}
     out = ex.run_dump(plan, arrays, tier, replicas,
@@ -78,7 +82,8 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
                          atomic=True)
         for r in replicas:
             r.write_bytes(r.manifest_path(plan.image_id), blob, atomic=True)
-    return {"image_id": plan.image_id, "stats": out["stats"]}
+    return {"image_id": plan.image_id, "stats": out["stats"],
+            "records": man["leaves"]}
 
 
 def merge_parts(tier: Tier, image_id: str, num_processes: int, replicas=()):

@@ -117,13 +117,15 @@ class MigrationOrchestrator:
 
     def __init__(self, checkpointer, *, handler: PreemptionHandler | None = None,
                  monitor=None, arch: str = "", mesh=None,
-                 topology: dict | None = None):
+                 topology: dict | None = None, predump_rounds: int = 0):
         self.ckpt = checkpointer
         self.handler = handler or PreemptionHandler()
         self.monitor = monitor
         self.arch = arch
         self.mesh = mesh
         self.topology = topology
+        self.predump_rounds = int(predump_rounds)
+        self.predump_rounds_run = 0
         self.planned_host_count: int | None = None
         self.planned_dp_degree: int | None = None
         self.hosts_dropped: list = []
@@ -184,6 +186,42 @@ class MigrationOrchestrator:
             log.warning("straggler escalation: dropping hosts %s, planned "
                         "restart fleet %d", drop, keep)
         return advice
+
+    def should_predump(self) -> bool:
+        """True while a preemption is pending and configured pre-copy
+        rounds remain: the loop should run pre_dump_round() and keep
+        training toward its drain boundary instead of migrating yet. The
+        rounds stream state out while steps still make progress, so the
+        eventual migrate() freezes only for the residual dirty set."""
+        return (self.handler.preempt_requested()
+                and self.predump_rounds_run < self.predump_rounds)
+
+    def pre_dump_round(self, state, *, step: int | None = None) -> dict:
+        """One iterative pre-copy round between the preemption signal and
+        the boundary drain (CRIU `criu pre-dump` before the final
+        `criu dump`). Delegates to the checkpointer's pre_dump — a
+        complete, restorable image whose cost is only the leaves dirtied
+        since the previous round — and counts it against
+        ``predump_rounds``."""
+        if step is None:
+            try:
+                # the common dict-shaped train state: fetch ONE scalar,
+                # not the whole tree (pre_dump captures the tree itself;
+                # a second full device_get here would double the round's
+                # host-transfer cost)
+                step = int(jax.device_get(state["step"]))
+            except (TypeError, KeyError, IndexError):
+                pairs = dict(flatten_with_paths(jax.device_get(state)))
+                step = int(pairs["step"]) if "step" in pairs else 0
+        out = self.ckpt.pre_dump(
+            state, step=step,
+            topology=_topology_of(self.mesh, self.topology))
+        self.predump_rounds_run += 1
+        log.info("pre-dump round %d/%d: image %s (%d dirty / %d clean "
+                 "leaves)", self.predump_rounds_run, self.predump_rounds,
+                 out["image_id"], out["stats"]["leaves_dirty"],
+                 out["stats"]["leaves_clean"])
+        return out
 
     # ----------------------------------------------------------------- dump
     def build_manifest(self, *, step: int, data_state: dict | None,
@@ -247,6 +285,7 @@ class MigrationOrchestrator:
         self.last_migration = rec
         self.last_image_id = out["image_id"]
         self.migrate_latency_s = time.monotonic() - t0
+        self.predump_rounds_run = 0   # a later migration pre-copies afresh
         log.info("migrated: image %s at step %d (%s) in %.3fs",
                  out["image_id"], step, rec.reason, self.migrate_latency_s)
         return EXIT_CHECKPOINTED
@@ -288,7 +327,8 @@ def resume(root, *, target_struct=None, shardings=None, mesh=None,
            host_count: int | None = None, dp_degree: int | None = None,
            global_batch: int | None = None, image_id: str | None = None,
            replicas=(), executor=None, verify_digest: bool = True,
-           allow_env_mismatch: bool = True) -> ResumeReport:
+           allow_env_mismatch: bool = True, lazy: bool = False,
+           prefetch_order=None) -> ResumeReport:
     """Restore-side lifecycle: image -> migration record -> topology-change
     plan -> bit-identity verification -> reshard.
 
@@ -298,7 +338,18 @@ def resume(root, *, target_struct=None, shardings=None, mesh=None,
     Digest verification happens on the restored host tree BEFORE any
     device placement: what is being proven is that the bytes that came
     back are the bytes that were dumped, independent of where they are
-    about to live."""
+    about to live.
+
+    lazy: post-copy restore — the report's ``state`` is a LazyState whose
+    skeleton is immediate and whose leaves fault in on access (prefetched
+    in ``prefetch_order``; see core/lazy.py). Chunk hashes are still
+    verified per read; the whole-tree digest check cannot run before the
+    leaves exist, so ``digest_verified`` stays None in the report and the
+    recorded digest is instead checked automatically the moment the tree
+    fully materializes (state.materialize() — CorruptionError on
+    mismatch, exactly like the eager path, just deferred);
+    target_struct/shardings don't apply to a tree that isn't there yet —
+    materialize() first, then cast/place."""
     from repro.core.restore import restore as _restore
 
     if mesh is not None and (host_count is None or dp_degree is None):
@@ -306,10 +357,32 @@ def resume(root, *, target_struct=None, shardings=None, mesh=None,
         host_count = host_count or topo["host_count"]
         dp_degree = dp_degree or topo["dp_degree"]
 
-    tree, man, pairs = _restore(root, image_id, target_struct=target_struct,
-                                replicas=replicas, executor=executor,
-                                allow_env_mismatch=allow_env_mismatch,
-                                with_pairs=True)
+    if lazy:
+        if target_struct is not None or shardings is not None:
+            raise ValueError(
+                "lazy restore serves raw host leaves on fault; "
+                "target_struct/shardings apply after materialize() — "
+                "restore eagerly, or cast/device_put the materialized "
+                "tree yourself")
+        from repro.core.lazy import lazy_restore
+        tree, man, server = lazy_restore(
+            root, image_id, replicas=replicas, executor=executor,
+            prefetch_order=prefetch_order,
+            allow_env_mismatch=allow_env_mismatch)
+        if verify_digest:
+            # deferred bit-identity: the server checks this digest when
+            # the tree fully materializes (LazyState.materialize /
+            # LeafServer.verify_tree_digest) — the lazy analogue of the
+            # eager pre-placement check below
+            server.expected_digest = \
+                MigrationManifest.from_image(man).state_digest
+        pairs = None
+    else:
+        tree, man, pairs = _restore(root, image_id,
+                                    target_struct=target_struct,
+                                    replicas=replicas, executor=executor,
+                                    allow_env_mismatch=allow_env_mismatch,
+                                    with_pairs=True)
     rec = MigrationManifest.from_image(man)
 
     plan = plan_topology_change(
@@ -318,6 +391,8 @@ def resume(root, *, target_struct=None, shardings=None, mesh=None,
         global_batch=global_batch)
 
     digest_ok: bool | None = None
+    if lazy:
+        verify_digest = False     # nothing to digest until leaves arrive
     if verify_digest and rec.state_digest:
         got = tree_digest(pairs)     # raw decoded bytes, pre-cast/pre-place
         digest_ok = got == rec.state_digest

@@ -30,6 +30,10 @@ class LeafPlan:
     shape: tuple
     nbytes: int
     use_prev: bool      # delta8: parent-leaf baseline available
+    reuse: dict | None = None   # pre-dump: cached manifest record for a
+    #                             provably-unchanged leaf; the executor
+    #                             emits it verbatim (no encode/hash/write)
+    #                             after probing its chunks are still pooled
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,16 +71,43 @@ class RestorePlan:
     def chain_depth(self) -> int:
         return len(self.manifests)
 
+    @property
+    def prefetch_order(self) -> tuple:
+        """Default lazy-restore streaming order: params first (the forward
+        pass touches them before anything else), then misc state, then
+        optimizer moments (only the next update step needs those). Within
+        a group, manifest order. A restored-but-idle job faulting in this
+        order can usually serve/compute before the image fully arrives —
+        CRIU's lazy-pages argument, leaf-granular."""
+        def group(path: str) -> int:
+            if path.startswith("params/") or path == "params":
+                return 0
+            if path.startswith("opt/") or "/opt/" in path:
+                return 2
+            return 1
+        recs = self.manifest["leaves"]
+        return tuple(r["path"] for r in sorted(
+            recs, key=lambda r: group(r["path"])))
+
 
 def plan_dump(leaves, *, step: int, image_id: str | None = None,
               parent: str | None = None, codec_policy=None,
               prev_host_tree: dict | None = None,
               chunk_bytes: int = CHUNK_BYTES,
-              process_index: int = 0, num_processes: int = 1) -> DumpPlan:
+              process_index: int = 0, num_processes: int = 1,
+              reuse_records: dict | None = None) -> DumpPlan:
     """leaves: [(path, array-or-ShapeDtypeStruct)]. Pure: no tier access,
-    no device access — applicability and partition decisions only."""
+    no device access — applicability and partition decisions only.
+
+    reuse_records: {path: manifest record} for leaves the dirty tracker
+    proved unchanged since a previous image (core/predump.py) — those
+    leaves plan as record re-emission instead of encode+store. The caller
+    owns the proof (content digest match + portable record); the executor
+    still probes chunk presence and falls back to a full encode if the
+    pool lost the chunks."""
     policy = codec_policy or (lambda p: "none")
     prev_host_tree = prev_host_tree or {}
+    reuse_records = reuse_records or {}
     plans, all_paths = [], []
     for i, (path, leaf) in enumerate(leaves):
         all_paths.append(path)
@@ -86,6 +117,14 @@ def plan_dump(leaves, *, step: int, image_id: str | None = None,
             leaf = np.asarray(leaf)
         dtype = np.dtype(leaf.dtype)
         shape = tuple(leaf.shape)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        reuse = reuse_records.get(path)
+        if reuse is not None:
+            plans.append(LeafPlan(
+                path=path, codec=reuse.get("codec", "none"),
+                dtype=str(dtype), shape=shape, nbytes=nbytes,
+                use_prev=False, reuse=reuse))
+            continue
         codec = policy(path)
         prev = prev_host_tree.get(path)
         applicable = codec_applicable(codec, dtype, shape, prev)
@@ -94,8 +133,7 @@ def plan_dump(leaves, *, step: int, image_id: str | None = None,
             codec = "none"
         plans.append(LeafPlan(
             path=path, codec=codec, dtype=str(dtype), shape=shape,
-            nbytes=int(np.prod(shape, dtype=np.int64)) * dtype.itemsize,
-            use_prev=use_prev))
+            nbytes=nbytes, use_prev=use_prev))
     return DumpPlan(
         image_id=image_id or f"step_{int(step):010d}", step=int(step),
         parent=parent, chunk_bytes=int(chunk_bytes),

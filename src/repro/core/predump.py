@@ -1,0 +1,132 @@
+"""Iterative pre-dump: CRIU's dirty-page tracking at leaf granularity.
+
+CRIU shrinks the stop-the-world window with `criu pre-dump`: while the
+process keeps running, memory is streamed to images and a soft-dirty bitmap
+tracks what changed; the final `criu dump` freezes the process only for the
+residual dirty set. This module is that mechanism for pytree checkpoints:
+
+  * ``leaf_digest`` — a cheap (blake2b) content digest per leaf, the
+    userspace stand-in for the kernel's soft-dirty page bitmap.
+  * ``DirtyLeafTracker`` — remembers, per leaf path, the digest *and the
+    manifest record* of the last image that stored this exact content.
+    ``reuse_for(digests)`` returns the records whose leaves are provably
+    unchanged; the dump plan emits them verbatim — no encode, no hash, no
+    chunk write (the chunks are already in the content-addressed pool,
+    referenced by the pre-dump image's manifest, so gc keeps them).
+
+A pre-dump round is an ordinary *committed* image (complete and restorable
+— stronger than CRIU's parent images, which are not restorable alone),
+marked with ``meta["pre_dump"]``. The final dump at the step boundary then
+pays only for leaves dirtied since the last round: the measured freeze
+window drops roughly in proportion to the stable fraction of state
+(benchmarks/stop_the_world.py).
+
+Reuse is only sound for *portable* records — ones that decode without a
+parent image (codec "none"/"bf16", or a lossy codec that fell back). A
+delta8-applied record encodes against a specific parent's values; re-
+pointing it at a different parent image would decode silently wrong
+numbers, so pre-dump rounds always encode with ``prev_host_tree=None``
+(delta8 degrades to full encodes inside rounds) and the tracker refuses to
+cache delta-applied records. The *final* dump still gets its delta8 chain:
+the session's baseline advances to the pre-dump tree, so residual dirty
+leaves delta-encode against the last round's image as parent.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+
+import numpy as np
+
+# manifest meta key marking an image as a pre-dump round:
+#   meta["pre_dump"] = {"round": k, "dirty": n_dirty, "clean": n_reused}
+PRE_DUMP_META_KEY = "pre_dump"
+
+
+def leaf_digest(arr) -> str:
+    """Content digest of one host leaf: dtype + shape + raw bytes.
+
+    blake2b rather than sha256: this runs over the FULL state every
+    classification pass (the price of userspace dirty tracking — there is
+    no kernel soft-dirty bitmap to ask), so it sits directly in the freeze
+    window and must be cheaper than the encode+hash+write it saves."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.blake2b(digest_size=20)
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    flat = a.reshape(-1)
+    if flat.size:
+        h.update(flat.view(np.uint8))
+    return h.hexdigest()
+
+
+def digest_pairs(pairs, executor=None) -> dict:
+    """{path: leaf_digest} over [(path, array)] — fanned out on the
+    executor's cpu pool when one is given (classification parallelizes
+    exactly like encode does)."""
+    pairs = list(pairs)
+    if executor is not None:
+        digs = executor.map_cpu(lambda pa: leaf_digest(pa[1]), pairs)
+        return {p: d for (p, _), d in zip(pairs, digs)}
+    return {p: leaf_digest(a) for p, a in pairs}
+
+
+def record_is_portable(rec: dict) -> bool:
+    """True when ``rec`` decodes with no parent image: safe to re-emit
+    under a different image / different parent link."""
+    codec = rec.get("codec", "none")
+    if codec == "none":
+        return True
+    if not rec.get("codec_meta", {}).get("applied", False):
+        return True          # lossy codec fell back to raw storage
+    return codec == "bf16"   # content-deterministic, parent-free decode
+
+
+class DirtyLeafTracker:
+    """Per-leaf dirty tracking across pre-dump rounds (one per session).
+
+    Thread-safe for the session's single-writer discipline plus the async
+    lane's ordered jobs; all state transitions go through ``update``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._digests: dict = {}     # path -> content digest at last image
+        self._records: dict = {}     # path -> portable manifest record
+        self.rounds = 0              # pre-dump rounds completed
+        self.source_image: str | None = None
+
+    def __repr__(self):
+        return (f"DirtyLeafTracker(rounds={self.rounds}, "
+                f"tracked={len(self._digests)}, "
+                f"source={self.source_image!r})")
+
+    @property
+    def warm(self) -> bool:
+        return bool(self._records)
+
+    def reuse_for(self, digests: dict) -> dict:
+        """{path: cached record} for every leaf whose current digest
+        matches the tracked one — the 'clean pages'. Everything else is
+        the dirty set the next dump must actually write."""
+        with self._lock:
+            return {p: self._records[p] for p, d in digests.items()
+                    if p in self._records and self._digests.get(p) == d}
+
+    def split(self, digests: dict) -> tuple:
+        """(dirty_paths, clean_paths) under the tracked digests."""
+        clean = set(self.reuse_for(digests))
+        return ([p for p in digests if p not in clean], sorted(clean))
+
+    def update(self, digests: dict, records, image_id: str, *,
+               pre_dump: bool):
+        """Adopt image ``image_id`` as the new reuse source: its records
+        (portable ones only) become reusable wherever the digest still
+        matches. ``records`` is an iterable of manifest leaf records."""
+        portable = {r["path"]: r for r in records if record_is_portable(r)}
+        with self._lock:
+            self._digests = {p: d for p, d in digests.items()
+                             if p in portable}
+            self._records = portable
+            self.source_image = image_id
+            if pre_dump:
+                self.rounds += 1

@@ -38,10 +38,21 @@ class Registry:
         for i in self.tier.image_ids():
             if self.tier.exists(self.tier.manifest_path(i)):
                 man = read_manifest(self.tier, i)
+                pd = (man.get("meta") or {}).get("pre_dump")
                 out.append({"image_id": i, "step": man["step"],
                             "created_at": man["created_at"],
-                            "parent": man["parent"]})
-        return sorted(out, key=lambda m: m["step"])
+                            "parent": man["parent"],
+                            "pre_dump": bool(pd),
+                            "round": (pd or {}).get("round", 0)})
+        # same-step ties resolve by WRITE ORDER (created_at): the
+        # canonical pre-copy flow (round then boundary dump at the same
+        # step) makes the final latest, while the reverse (periodic save,
+        # then SIGTERM starts a round at that same step) makes the round
+        # latest — both are "the newest image of this step", and position
+        # decides retention and delta8 parenthood. pre_dump/round only
+        # break exact-timestamp ties deterministically.
+        return sorted(out, key=lambda m: (m["step"], m["created_at"],
+                                          not m["pre_dump"], m["round"]))
 
     def latest(self):
         imgs = self.images()
@@ -78,11 +89,13 @@ class Registry:
                 frontier.append(p)
         return out
 
-    def resolve_parent_baseline(self, baseline_step, prev_host, step):
+    def resolve_parent_baseline(self, baseline_step, prev_host, step,
+                                baseline_image: str | None = None):
         """Shared incremental-chain rule (sync submit time and async run
         time): the parent is the latest committed image, and the delta8
         baseline tree is kept only when it is provably that image's
-        content — its step matches the step the baseline was captured at.
+        content — its step (or, stronger, its image id when the caller
+        tracked one) matches the image the baseline was captured from.
         Otherwise the baseline is dropped (full encode): a delta decoded
         against a different parent's values restores silently wrong
         numbers.
@@ -91,15 +104,25 @@ class Registry:
         rewrites history (overwrite or rollback): the divergent future is
         deleted first — its images delta-depend on, or would form parent
         cycles with, the image about to be overwritten — and the chain
-        restarts among the survivors."""
+        restarts among the survivors. One exception: a pre-dump round AT
+        the dump's own step is not divergent history, it is this very
+        dump's pre-copy ancestor (the canonical flow pre-dumps after the
+        last step and the boundary dump lands at that same step), so it
+        stays and becomes the parent."""
         latest = self.latest()
-        if latest and latest["step"] >= int(step):
+        if latest and latest["step"] >= int(step) and not (
+                latest["pre_dump"] and latest["step"] == int(step)):
             self.truncate_from(step)
             latest = self.latest()
         parent = latest["image_id"] if latest else None
-        if prev_host is not None and (latest is None
-                                      or latest["step"] != baseline_step):
-            prev_host = None
+        if prev_host is not None:
+            if baseline_image is not None:
+                ok = latest is not None \
+                    and latest["image_id"] == baseline_image
+            else:
+                ok = latest is not None and latest["step"] == baseline_step
+            if not ok:
+                prev_host = None
         return parent, prev_host
 
     def truncate_from(self, step) -> list:
@@ -114,12 +137,27 @@ class Registry:
 
     def retain(self, keep_last: int = 3, keep_every: int = 0) -> list:
         """Delete images outside the policy (keeping delta-chain parents).
-        Returns deleted image ids."""
+        Returns deleted image ids.
+
+        Pre-dump rounds are counted separately from the policy: the
+        in-progress pre-copy chain (rounds newer than the newest boundary
+        image) is always kept — reaping it would throw away exactly the
+        work the next dump's residual window depends on — while superseded
+        rounds are dropped immediately (keep_last never spends a slot on a
+        round; the boundary image that followed it carries the state)."""
         imgs = self.images()
-        keep = {m["image_id"] for m in imgs[-keep_last:]} if keep_last else set()
+        finals = [m for m in imgs if not m["pre_dump"]]
+        keep = {m["image_id"] for m in finals[-keep_last:]} if keep_last \
+            else set()
         if keep_every:
-            keep |= {m["image_id"] for m in imgs
+            keep |= {m["image_id"] for m in finals
                      if m["step"] % keep_every == 0}
+        if finals:
+            newest_final = imgs.index(finals[-1])
+            keep |= {m["image_id"] for m in imgs[newest_final + 1:]
+                     if m["pre_dump"]}
+        else:
+            keep |= {m["image_id"] for m in imgs if m["pre_dump"]}
         keep = self._parents_of(keep)
         deleted = []
         for m in imgs:

@@ -35,6 +35,20 @@ def latest_image_id(tier) -> str | None:
     return best
 
 
+def check_env(man: dict, allow_env_mismatch: bool = True):
+    """Compare the image's recorded env fingerprint against this process;
+    warn (the default — state is abstract) or raise on mismatch. Shared by
+    the eager and lazy restore paths so the policy can't diverge."""
+    env = manifest.env_fingerprint()
+    for k, v in man["env"].items():
+        if env.get(k) != v:
+            msg = f"env mismatch on restore: {k}: image={v} here={env.get(k)}"
+            if allow_env_mismatch:
+                log.warning("%s (restoring anyway — state is abstract)", msg)
+            else:
+                raise RuntimeError(msg)
+
+
 def _unflatten_paths(pairs: dict):
     """Rebuild nested dicts from 'a/b/c' paths (job state is dict-shaped)."""
     root: dict = {}
@@ -67,15 +81,7 @@ def restore(root, image_id: str | None = None, *, target_struct=None,
         raise FileNotFoundError("no checkpoint images found")
     plan = plan_restore(tier, image_id)
     man = plan.manifest
-
-    env = manifest.env_fingerprint()
-    for k, v in man["env"].items():
-        if env.get(k) != v:
-            msg = f"env mismatch on restore: {k}: image={v} here={env.get(k)}"
-            if allow_env_mismatch:
-                log.warning("%s (restoring anyway — state is abstract)", msg)
-            else:
-                raise RuntimeError(msg)
+    check_env(man, allow_env_mismatch)
 
     pairs = ex.run_restore(plan, tier, replicas)
 

@@ -126,6 +126,17 @@ class Tier:
     def read_chunk(self, h: str) -> bytes:
         return self.read_bytes(self.chunk_path(h))
 
+    def read_chunk_range(self, h: str, offset: int, length: int) -> bytes:
+        """Read ``length`` bytes of chunk ``h`` starting at ``offset`` —
+        the page-server primitive behind lazy leaf-range reads. Base
+        implementation reads the whole chunk and slices; tiers with
+        seekable storage override (LocalDirTier uses pread-style seeks, so
+        serving the first KB of a 4 MiB chunk costs a KB of I/O, not
+        4 MiB). NOTE: a range of a chunk cannot be hash-verified against
+        the chunk's content address — range reads trade verification for
+        latency; LeafServer.get() (whole-leaf faults) stays verified."""
+        return self.read_chunk(h)[offset:offset + length]
+
     def image_ids(self) -> list:
         try:
             return sorted(self.listdir("images"))
@@ -178,6 +189,11 @@ class LocalDirTier(Tier):
             return max(0.0, time.time() - os.path.getmtime(self._p(rel)))
         except OSError:
             return None
+
+    def read_chunk_range(self, h: str, offset: int, length: int) -> bytes:
+        with open(self._p(self.chunk_path(h)), "rb") as f:
+            f.seek(offset)
+            return f.read(length)
 
     def listdir(self, rel: str) -> list:
         return os.listdir(self._p(rel))

@@ -65,6 +65,7 @@ def build_session_config(args, cfg, monitor) -> SessionConfig:
         preemption=PreemptionPolicy(install_signals=True),
         migration=MigrationPolicy(
             arch=cfg.name, monitor=monitor,
+            predump_rounds=args.predump_rounds,
             topology={"axes": [], "dp_degree": 1,
                       "device_count": jax.device_count(), "host_count": 1}))
 
@@ -96,6 +97,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-io-workers", type=int, default=0,
                     help="chunk-I/O threads for the pipelined engine "
                          "(0 = engine default)")
+    ap.add_argument("--predump-rounds", type=int, default=0,
+                    help="iterative pre-copy rounds between a preemption "
+                         "signal and the final migration dump: each round "
+                         "streams a restorable image while training "
+                         "continues, so the final freeze writes only the "
+                         "residual dirty set (0 = dump immediately)")
+    ap.add_argument("--lazy-resume", action="store_true",
+                    help="post-copy resume: print the image skeleton and "
+                         "stream leaves in the plan's prefetch order, "
+                         "then materialize for training (demonstrates "
+                         "RestoreRequest(lazy=True))")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--metrics-file", default="")
     ap.add_argument("--final-ckpt", action="store_true")
@@ -132,9 +144,31 @@ def main(argv=None):
     if args.resume and sess and sess.registry.latest():
         struct = jax.eval_shape(
             lambda: init_train_state(lm, jax.random.PRNGKey(args.seed)))
-        res = sess.restore(RestoreRequest(target_struct=struct,
-                                          host_count=1, dp_degree=1))
-        state = jax.tree.map(jnp.asarray, res.state)
+        if args.lazy_resume:
+            # post-copy: skeleton now, leaves stream behind first access;
+            # training needs the whole tree, so materialize before the
+            # first step (a serving job would start on params alone)
+            res = sess.restore(RestoreRequest(lazy=True, host_count=1,
+                                              dp_degree=1))
+            srv = res.state.server
+            print(f"[train] lazy resume: skeleton of "
+                  f"{len(srv.paths())} leaves ready, "
+                  f"{srv.remaining} still streaming")
+            # materialize() runs the deferred whole-tree digest check
+            # itself (CorruptionError on mismatch) when the migration
+            # record carries one — nothing to re-implement here
+            host = res.state.materialize()
+            state = jax.tree.map(
+                lambda want, arr: jnp.asarray(arr).astype(want.dtype),
+                struct, host)
+            print(f"[train] lazy resume materialized: "
+                  f"{srv.stats['prefetched']} leaves prefetched, "
+                  f"{srv.stats['faults']} faulted, digest "
+                  f"{'verified' if srv.expected_digest else 'n/a'}")
+        else:
+            res = sess.restore(RestoreRequest(target_struct=struct,
+                                              host_count=1, dp_degree=1))
+            state = jax.tree.map(jnp.asarray, res.state)
         start_step = res.data["step"]
         it = res.make_iterator(ds)
         note = (f" (migrated: {res.migration.reason}, topology change "
@@ -166,19 +200,28 @@ def main(argv=None):
     try:
         for s in range(start_step, args.steps):
             if preempt.preempt_requested():
-                print(f"[train] preemption ({preempt.reason}) at step {s}; "
-                      f"checkpointing and exiting {EXIT_CHECKPOINTED}")
-                if sess:
-                    ticket = sess.migrate(MigrateRequest(state=state,
-                                                         iterator=it,
-                                                         opt_cfg=opt_cfg))
-                    exit_code = ticket.exit_code
-                    print(f"[train] migration image durable in "
-                          f"{ticket.latency_s:.3f}s")
+                if sess and sess.should_predump() and s < args.steps - 1:
+                    # pre-copy window: stream a restorable image now and
+                    # keep training — the final migrate() below freezes
+                    # only for what these steps dirty
+                    out = sess.pre_dump_round(state, step=int(state["step"]))
+                    print(f"[train] pre-dump round -> {out['image_id']} "
+                          f"({out['stats']['leaves_dirty']} dirty / "
+                          f"{out['stats']['leaves_clean']} clean leaves)")
                 else:
-                    it.stop_prefetch()
-                    exit_code = EXIT_CHECKPOINTED
-                break
+                    print(f"[train] preemption ({preempt.reason}) at step "
+                          f"{s}; checkpointing and exiting "
+                          f"{EXIT_CHECKPOINTED}")
+                    if sess:
+                        ticket = sess.migrate(MigrateRequest(
+                            state=state, iterator=it, opt_cfg=opt_cfg))
+                        exit_code = ticket.exit_code
+                        print(f"[train] migration image durable in "
+                              f"{ticket.latency_s:.3f}s")
+                    else:
+                        it.stop_prefetch()
+                        exit_code = EXIT_CHECKPOINTED
+                    break
             t0 = time.time()
             batch = {"tokens": jnp.asarray(it.next_prefetched())}
             state, m = step_fn(state, batch)

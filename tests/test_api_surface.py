@@ -30,16 +30,18 @@ EXPECTED_FIELDS = {
     "AsyncPolicy": ["enabled", "max_pending"],
     "PreemptionPolicy": ["install_signals", "signals", "exit_code"],
     "MigrationPolicy": ["arch", "topology", "mesh", "monitor", "restart",
-                        "verify_digest"],
+                        "verify_digest", "predump_rounds"],
     "DumpRequest": ["state", "step", "meta", "topology", "mode"],
     "DumpReceipt": ["step", "mode", "committed", "image_id", "stats",
                     "duration_s"],
     "RestoreRequest": ["image_id", "target_struct", "shardings", "mesh",
                        "host_count", "dp_degree", "global_batch",
-                       "verify_digest", "allow_env_mismatch"],
+                       "verify_digest", "allow_env_mismatch", "lazy",
+                       "prefetch_order"],
     "RestoreResult": ["state", "image_id", "step", "manifest", "migration",
                       "topology_changed", "changes", "host_count",
-                      "dp_degree", "data", "digest_verified", "report"],
+                      "dp_degree", "data", "digest_verified", "report",
+                      "lazy"],
     "MigrateRequest": ["state", "iterator", "step", "data_state", "rng",
                        "meta_extra", "opt_cfg", "reason"],
     "MigrationTicket": ["exit_code", "image_id", "step", "reason",
@@ -58,9 +60,12 @@ EXPECTED_SESSION_METHODS = {
     "plan": ["tree_or_abstract", "step"],
     "save": ["tree", "step", "meta", "topology"],
     "save_async": ["tree", "step", "meta", "topology"],
+    "pre_dump": ["tree", "step", "meta", "topology"],
+    "pre_dump_round": ["state", "step"],
     "load": ["image_id", "target_struct", "shardings"],
     "load_latest": ["target_struct", "shardings"],
     "should_migrate": [],
+    "should_predump": [],
     "observe_step": ["host_times"],
     "capabilities": [],
     "close": ["drain"],
@@ -108,8 +113,12 @@ def test_session_constructor_takes_config_and_overrides():
     assert params == ["self", "config", "overrides"]
 
 
-def test_table1_covers_all_ten_paper_rows():
-    assert sorted(api.TABLE1) == list(range(1, 11))
+def test_table1_covers_paper_rows_plus_precopy_extensions():
+    # rows 1-10 are the paper's Table 1; 11-12 extend it with CRIU's
+    # pre-copy / post-copy mechanisms (pre-dump, lazy-pages)
+    assert sorted(api.TABLE1) == list(range(1, 13))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
+    assert api.TABLE1[11][2] == "pre_dump"
+    assert api.TABLE1[12][2] == "lazy_restore"

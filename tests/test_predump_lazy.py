@@ -1,0 +1,392 @@
+"""Pre-copy (iterative pre-dump) and post-copy (lazy restore) contracts.
+
+The invariants that make the latency features safe to use:
+
+  * a residual dump after pre-dump rounds restores BIT-IDENTICAL to a
+    monolithic dump of the same state — the freeze window shrinks, the
+    image does not change;
+  * lazy restore, fully faulted, equals the eager restore bit-for-bit;
+  * pre-dump rounds interleaved with delta8 chains never corrupt parent
+    links (rounds are parent-free by construction; the final dump deltas
+    against the last round's image);
+  * reuse degrades to a full encode — never to a wrong image — when the
+    cached chunks are gone.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSession, CodecPolicy, DumpRequest,
+                       MigrationPolicy, RestoreRequest, SessionConfig)
+from repro.core.plan import plan_restore
+from repro.core.predump import (DirtyLeafTracker, leaf_digest,
+                                record_is_portable)
+
+
+def tree0():
+    rng = np.random.RandomState(0)
+    return {
+        "params": {"w": rng.randn(512).astype(np.float32),
+                   "b": rng.randn(64).astype(np.float32),
+                   "frozen": np.ones(256, np.float32)},
+        "opt": {"m": {"w": np.zeros(512, np.float32)},
+                "v": {"w": np.full(512, 0.01, np.float32)}},
+        "step": np.int32(1),
+    }
+
+
+def bump(tree, *paths, step=None):
+    """Copy ``tree`` with +1.0 on the named leaves (and step if given)."""
+    out = {"params": dict(tree["params"]),
+           "opt": {"m": dict(tree["opt"]["m"]), "v": dict(tree["opt"]["v"])},
+           "step": tree["step"] if step is None else np.int32(step)}
+    for p in paths:
+        node, parts = out, p.split("/")
+        for k in parts[:-1]:
+            node = node[k]
+        node[parts[-1]] = node[parts[-1]] + np.float32(1.0)
+    return out
+
+
+def assert_tree_equal(got, want, msg=""):
+    flat_g = {p: np.asarray(a) for p, a in _flat(got)}
+    flat_w = {p: np.asarray(a) for p, a in _flat(want)}
+    assert flat_g.keys() == flat_w.keys(), msg
+    for p in flat_w:
+        assert np.array_equal(flat_g[p], flat_w[p]), f"{msg}: {p}"
+
+
+def _flat(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flat(v, f"{prefix}{k}/")
+    else:
+        yield prefix[:-1], tree
+
+
+@pytest.fixture(params=["none", "delta8"])
+def codec(request):
+    return CodecPolicy(optimizer=request.param)
+
+
+def session(tmp, codec=None, **kw):
+    return CheckpointSession(SessionConfig(
+        root=str(tmp), codec=codec or CodecPolicy(), **kw))
+
+
+# ------------------------------------------------------------ pre-dump core
+def test_residual_restore_bit_identical_to_monolithic(tmp_path, codec):
+    t1 = tree0()
+    t2 = bump(t1, "params/w", "opt/m/w", step=2)
+    pre = session(tmp_path / "pre", codec)
+    pre.pre_dump(t1, step=1)
+    out = pre.save(t2, step=2)
+    assert out["stats"]["leaves_reused"] >= 2   # frozen, b, v/w stayed
+    mono = session(tmp_path / "mono", codec)
+    mono.save(t1, step=1)
+    mono.save(t2, step=2)
+    got_p = pre.restore(RestoreRequest(verify_digest=False)).state
+    got_m = mono.restore(RestoreRequest(verify_digest=False)).state
+    assert_tree_equal(got_p, got_m, "residual vs monolithic")
+    # and both equal the source (delta8 may be lossy on the DIRTY leaf,
+    # but identically so on both paths — checked above; lossless leaves
+    # must equal the source exactly)
+    assert np.array_equal(np.asarray(got_p["params"]["frozen"]),
+                          t2["params"]["frozen"])
+
+
+def test_residual_dump_writes_only_dirty(tmp_path):
+    sess = session(tmp_path)
+    t1 = tree0()
+    r0 = sess.pre_dump(t1, step=1)
+    assert r0["stats"]["leaves_dirty"] == 6 and r0["stats"]["leaves_clean"] == 0
+    t2 = bump(t1, "params/w", step=2)
+    out = sess.save(t2, step=2)
+    s = out["stats"]
+    assert s["leaves_reused"] == 4          # all but params/w and step
+    assert s["bytes_stored"] < r0["stats"]["bytes_stored"]
+    assert s["bytes_reused"] > 0
+
+
+def test_predump_images_are_complete_and_restorable(tmp_path):
+    sess = session(tmp_path)
+    t1 = tree0()
+    r = sess.pre_dump(t1, step=1)
+    got = sess.load(r["image_id"])[0]
+    assert_tree_equal(got, t1, "pre-dump image restore")
+
+
+def test_second_round_skips_unchanged(tmp_path):
+    sess = session(tmp_path)
+    t1 = tree0()
+    sess.pre_dump(t1, step=1)
+    t2 = bump(t1, "opt/m/w", step=2)
+    r1 = sess.pre_dump(t2, step=2)
+    assert r1["stats"]["leaves_clean"] == 4
+    assert r1["stats"]["leaves_dirty"] == 2    # opt/m/w + step
+
+
+def test_dump_request_pre_dump_mode(tmp_path):
+    sess = session(tmp_path)
+    rec = sess.dump(DumpRequest(state=tree0(), step=1, mode="pre_dump"))
+    assert rec.mode == "pre_dump" and rec.committed
+    assert rec.stats["predump_round"] == 0
+    with pytest.raises(ValueError):
+        DumpRequest(state=None, step=0, mode="predump")
+
+
+# -------------------------------------------------- registry interactions
+def test_round_after_same_step_final_survives_and_chains(tmp_path):
+    """Preempt-at-checkpoint-boundary: a periodic save lands at step N,
+    then SIGTERM starts a pre-copy round at that same step. The round
+    must not be reaped at birth, must become latest (write order wins
+    same-step ties), and the next dump must delta8 against it."""
+    codec = CodecPolicy(optimizer="delta8")
+    sess = session(tmp_path, codec)
+    t = tree0()
+    sess.save(t, step=10)
+    r = sess.pre_dump(t, step=10)
+    imgs = sess.registry.images()
+    assert r["image_id"] in [m["image_id"] for m in imgs], imgs
+    assert sess.registry.latest()["image_id"] == r["image_id"]
+    t2 = bump(t, "opt/m/w", step=11)
+    out = sess.save(t2, step=11)
+    rec = [x for x in out["records"] if x["path"] == "opt/m/w"][0]
+    assert rec["codec"] == "delta8" and rec["codec_meta"]["applied"], rec
+    got = sess.restore(RestoreRequest(verify_digest=False)).state
+    mono = session(tmp_path / "mono", codec)
+    mono.save(t, step=10)
+    mono.save(t2, step=11)
+    assert_tree_equal(got, mono.restore(
+        RestoreRequest(verify_digest=False)).state,
+        "boundary-preempt chain vs monolithic")
+
+
+def test_final_outranks_same_step_predump(tmp_path):
+    sess = session(tmp_path)
+    t = tree0()
+    sess.pre_dump(t, step=5)
+    sess.save(t, step=5)        # canonical: boundary dump at round's step
+    latest = sess.registry.latest()
+    assert latest["image_id"] == "step_0000000005"
+    assert not latest["pre_dump"]
+
+
+def test_superseded_rounds_reaped_active_chain_kept(tmp_path):
+    sess = session(tmp_path)
+    t1 = tree0()
+    sess.save(t1, step=1)
+    t2 = bump(t1, "params/w", step=2)
+    sess.pre_dump(t2, step=2)          # active chain: newer than final@1
+    ids = [m["image_id"] for m in sess.registry.images()]
+    assert any(m["pre_dump"] for m in sess.registry.images()), ids
+    t3 = bump(t2, "params/b", step=3)
+    sess.save(t3, step=3)              # supersedes the round
+    imgs = sess.registry.images()
+    assert not any(m["pre_dump"] for m in imgs), imgs
+    assert_tree_equal(sess.load_latest()[0], t3)
+
+
+def test_predump_interleaved_with_delta8_chain(tmp_path):
+    """save -> round -> round -> final under delta8: parent links must stay
+    acyclic and every image decodable; the final tree restores exactly."""
+    codec = CodecPolicy(optimizer="delta8")
+    sess = session(tmp_path, codec)
+    t1 = tree0()
+    sess.save(t1, step=1)
+    t2 = bump(t1, "opt/m/w", step=2)
+    sess.pre_dump(t2, step=2)
+    t3 = bump(t2, "opt/v/w", step=3)
+    sess.pre_dump(t3, step=3)
+    t4 = bump(t3, "opt/m/w", "params/w", step=4)
+    out = sess.save(t4, step=4)
+    assert out["stats"]["leaves_reused"] > 0
+    # chain walk must terminate (plan_restore raises on cycles) and the
+    # delta8 leaves decode against the right parents
+    plan = plan_restore(sess.tier, out["image_id"])
+    assert plan.chain_depth <= 3
+    got = sess.restore(RestoreRequest(verify_digest=False)).state
+    # delta8 is lossy: compare against what a monolithic delta8 session
+    # produces for the same sequence (same codec, same baselines)
+    mono = session(tmp_path / "mono", codec)
+    mono.save(t1, step=1)
+    mono.save(t2, step=2)
+    mono.save(t3, step=3)
+    mono.save(t4, step=4)
+    assert_tree_equal(got, mono.restore(
+        RestoreRequest(verify_digest=False)).state, "delta8 interleave")
+    # lossless leaves exact vs source
+    assert np.array_equal(np.asarray(got["params"]["w"]),
+                          t4["params"]["w"])
+
+
+def test_reuse_falls_back_when_chunks_vanish(tmp_path):
+    sess = session(tmp_path)
+    t1 = tree0()
+    r = sess.pre_dump(t1, step=1)
+    # simulate a foreign gc: remove every pooled chunk (and keep the
+    # tier's index truthful via delete_chunk)
+    for name in sess.tier.listdir("chunks"):
+        sess.tier.delete_chunk(name.removesuffix(".bin"))
+    sess.tier.delete(f"images/{r['image_id']}")
+    t2 = bump(t1, "params/w", step=2)
+    out = sess.save(t2, step=2)         # tracker is warm but pool is empty
+    assert out["stats"]["leaves_reused"] == 0   # fell back, didn't lie
+    assert_tree_equal(sess.load_latest()[0], t2)
+
+
+# ------------------------------------------------------------- lazy restore
+def test_lazy_fully_faulted_equals_eager(tmp_path, codec):
+    sess = session(tmp_path, codec)
+    t1 = tree0()
+    sess.save(t1, step=1)
+    t2 = bump(t1, "opt/m/w", step=2)
+    sess.save(t2, step=2)
+    eager = sess.restore(RestoreRequest(verify_digest=False)).state
+    res = sess.restore(RestoreRequest(lazy=True))
+    assert res.lazy and res.digest_verified is None
+    assert_tree_equal(res.state.materialize(), eager, "lazy vs eager")
+
+
+def test_lazy_skeleton_and_single_fault(tmp_path):
+    sess = session(tmp_path)
+    t = tree0()
+    sess.save(t, step=1)
+    res = sess.restore(RestoreRequest(lazy=True, prefetch_order=()))
+    srv = res.state.server
+    assert srv.remaining == 6                  # nothing read yet
+    assert res.state.peek("params").peek("w") == ("float32", (512,))
+    assert set(res.state) == {"params", "opt", "step"}
+    w = res.state["params"]["w"]
+    assert np.array_equal(w, t["params"]["w"])
+    assert srv.stats["faults"] == 1 and srv.remaining == 5
+
+
+def test_lazy_prefetch_order_params_first(tmp_path):
+    sess = session(tmp_path)
+    sess.save(tree0(), step=1)
+    plan = plan_restore(sess.tier, "step_0000000001")
+    order = list(plan.prefetch_order)
+    assert order[0].startswith("params/")
+    assert order[-1].startswith("opt/")
+
+
+def test_lazy_range_reads(tmp_path):
+    codec = CodecPolicy(optimizer="bf16")
+    sess = session(tmp_path, codec)
+    t = tree0()
+    sess.save(t, step=1)
+    res = sess.restore(RestoreRequest(lazy=True, prefetch_order=()))
+    srv = res.state.server
+    raw = srv.read_range("params/w", 8, 40)
+    assert raw == t["params"]["w"].tobytes()[8:48]
+    # codec-applied leaf: decodes fully, slices the decoded buffer
+    dec = np.asarray(srv.get("opt/v/w"))
+    assert srv.read_range("opt/v/w", 0, 12) == dec.tobytes()[:12]
+
+
+def test_lazy_rejects_struct_and_shardings(tmp_path):
+    sess = session(tmp_path)
+    sess.save(tree0(), step=1)
+    with pytest.raises(ValueError, match="materialize"):
+        sess.restore(RestoreRequest(lazy=True, target_struct={"x": None}))
+
+
+# -------------------------------------------------------- orchestration
+def test_orchestrated_predump_rounds_then_migrate(tmp_path):
+    sess = session(tmp_path,
+                   migration=MigrationPolicy(arch="t", predump_rounds=2,
+                                             topology={"host_count": 1,
+                                                       "dp_degree": 1,
+                                                       "axes": []}))
+    t = tree0()
+    assert not sess.should_predump()           # no preemption yet
+    sess.handler.request("test")
+    assert sess.should_predump()
+    sess.pre_dump_round(t, step=1)
+    t2 = bump(t, "params/w", step=2)
+    assert sess.should_predump()
+    sess.pre_dump_round(t2, step=2)
+    assert not sess.should_predump()           # budget spent
+    assert sess.should_migrate()
+    from repro.api import MigrateRequest
+    ticket = sess.migrate(MigrateRequest(state=t2, step=2))
+    assert ticket.exit_code == 85
+    orch = sess._orchestrator()
+    assert orch.predump_rounds_run == 0        # reset for a later cycle
+    got = sess.restore(RestoreRequest(verify_digest=False))
+    assert_tree_equal(got.state, t2, "post-migration restore")
+
+
+def test_lazy_materialize_runs_deferred_digest_check(tmp_path):
+    """The post-copy trade's deferred half: full materialization verifies
+    the whole-tree digest from the migration record automatically (every
+    lazy consumer gets the eager path's bit-identity guarantee), and a
+    mismatch raises exactly like the eager path would."""
+    from repro.api import MigrateRequest
+    from repro.core.integrity import CorruptionError
+    sess = session(tmp_path,
+                   migration=MigrationPolicy(topology={"host_count": 1,
+                                                       "dp_degree": 1,
+                                                       "axes": []}))
+    t = tree0()
+    sess.handler.request("test")
+    sess.migrate(MigrateRequest(state=t, step=1))
+    res = sess.restore(RestoreRequest(lazy=True))
+    assert res.digest_verified is None          # deferred, not skipped
+    srv = res.state.server
+    assert srv.expected_digest == res.migration.state_digest
+    assert srv.expected_digest                  # lossless policy: recorded
+    host = res.state.materialize()              # runs the check itself
+    assert_tree_equal(host, t, "lazy materialize vs migrated state")
+    assert srv.verify_tree_digest() is True
+    # a tampered expectation must raise on materialize, like eager would
+    res2 = sess.restore(RestoreRequest(lazy=True))
+    res2.state.server.expected_digest = "0" * 64
+    with pytest.raises(CorruptionError):
+        res2.state.materialize()
+    # and verify_digest=False waives it
+    res3 = sess.restore(RestoreRequest(lazy=True, verify_digest=False))
+    assert res3.state.server.expected_digest is None
+    res3.state.materialize()
+
+
+def test_leaf_server_drain_blocks_until_prefetch_lands(tmp_path):
+    sess = session(tmp_path)
+    t = tree0()
+    sess.save(t, step=1)
+    res = sess.restore(RestoreRequest(lazy=True, prefetch_order=()))
+    srv = res.state.server
+    n = srv.prefetch(("params",))
+    assert n == 3
+    srv.drain()
+    assert srv.stats["prefetched"] == 3
+    assert srv.remaining == 3                   # opt/* and step untouched
+
+
+# ------------------------------------------------------------ unit pieces
+def test_leaf_digest_covers_dtype_shape_content():
+    a = np.arange(8, dtype=np.float32)
+    assert leaf_digest(a) == leaf_digest(a.copy())
+    assert leaf_digest(a) != leaf_digest(a.astype(np.float64))
+    assert leaf_digest(a) != leaf_digest(a.reshape(2, 4))
+    b = a.copy()
+    b[3] += 1
+    assert leaf_digest(a) != leaf_digest(b)
+    assert leaf_digest(np.zeros(0, np.int8)) != leaf_digest(
+        np.zeros(0, np.uint8))
+
+
+def test_tracker_refuses_delta_applied_records():
+    tr = DirtyLeafTracker()
+    recs = [
+        {"path": "a", "codec": "none", "codec_meta": {}},
+        {"path": "b", "codec": "delta8", "codec_meta": {"applied": True}},
+        {"path": "c", "codec": "delta8", "codec_meta": {"applied": False}},
+        {"path": "d", "codec": "bf16", "codec_meta": {"applied": True}},
+    ]
+    assert [record_is_portable(r) for r in recs] == [True, False, True, True]
+    tr.update({r["path"]: "dig" for r in recs}, recs, "img", pre_dump=True)
+    reuse = tr.reuse_for({r["path"]: "dig" for r in recs})
+    assert set(reuse) == {"a", "c", "d"}
+    # digest mismatch -> dirty
+    assert set(tr.reuse_for({"a": "other"})) == set()
