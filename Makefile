@@ -1,8 +1,9 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test lint api-check docs-check bench-compare bench-smoke \
-	bench-facade bench-migration bench-stw run-example
+.PHONY: check test lint api-check docs-check cov-remote bench-compare \
+	bench-smoke bench-facade bench-migration bench-stw bench-remote \
+	run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -24,6 +25,14 @@ docs-check:
 # full tier-1 suite (~8 min)
 test:
 	python -m pytest -x -q
+
+# remote-tier coverage floor: the fault-injection suites must keep
+# core/remote.py >= 90% covered (needs pytest-cov; CI gate)
+cov-remote:
+	python -m pytest -q --cov=repro.core --cov-report=json:/tmp/cov.json \
+		tests/test_remote_tier.py tests/test_remote_properties.py \
+		tests/test_checkpoint_pipeline.py
+	python scripts/coverage_gate.py /tmp/cov.json repro/core/remote.py 90
 
 # style + correctness lint (config in pyproject.toml; CI gate)
 lint:
@@ -50,6 +59,11 @@ bench-migration:
 # the pre-copy freeze must be strictly smaller; restores bit-identical)
 bench-stw:
 	python benchmarks/stop_the_world.py
+
+# remote transfer: parallel multipart >= 2x serial, warm cache < cold
+# (bit-identical restores hard-asserted in every mode)
+bench-remote:
+	python benchmarks/remote_transfer.py
 
 # run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
 run-example:

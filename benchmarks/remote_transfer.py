@@ -1,0 +1,156 @@
+"""Remote transfer path: parallel multipart vs serial upload, and
+cold-vs-warm-cache restore through a simulated object store.
+
+The migration story's practical cost is not the dump — it is moving the
+image through remote storage (the paper's OSPool scenario; Tošić and the
+NERSC DMTCP study both call transfer the bottleneck). This benchmark
+runs the simulated store in ``realtime`` mode, so its latency/bandwidth
+model costs real wall-clock and parallelism measurably overlaps:
+
+  upload    one blob as multipart parts: serial lane (parts inline, one
+            connection at a time) vs the executor's transfer lanes —
+            per-connection bandwidth is the whole reason parallel wins.
+  restore   the same checkpoint image restored cold (fresh cache front,
+            every chunk crosses the simulated network) vs warm (the
+            write-through front already holds it).
+
+Bit-identity is a HARD assert everywhere — uploads read back equal,
+restores equal the dumped tree — in --smoke and full mode alike; the
+--smoke timing gates (parallel >= 2x serial, warm strictly faster than
+cold) are the acceptance criteria of ISSUE 5.
+
+    python benchmarks/remote_transfer.py            # full
+    python benchmarks/remote_transfer.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dump import dump
+from repro.core.executor import CheckpointExecutor, get_default_executor
+from repro.core.remote import (CachingTier, NetworkModel, RemoteTier,
+                               SimulatedObjectStore)
+from repro.core.restore import restore
+from repro.core.storage import MemoryTier
+
+
+def _network(latency_ms: float, bw_mbps: float) -> NetworkModel:
+    return NetworkModel(latency_s=latency_ms / 1e3,
+                        bandwidth_bps=bw_mbps * 1e6)
+
+
+def _realtime_store(latency_ms: float, bw_mbps: float) -> SimulatedObjectStore:
+    store = SimulatedObjectStore(network=_network(latency_ms, bw_mbps))
+    store.clock.realtime = True
+    return store
+
+
+def bench_parallel_vs_serial_upload(emit, *, mb=16, part_kb=256,
+                                    latency_ms=3.0, bw_mbps=200.0,
+                                    trials=3) -> float:
+    """Upload one ``mb``-MB blob as multipart parts, one connection at a
+    time vs fanned out on the transfer lanes. Returns the speedup."""
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=mb << 20, dtype=np.uint8).tobytes()
+    times = {}
+    for mode in ("serial", "parallel"):
+        ex = CheckpointExecutor(serial=True) if mode == "serial" \
+            else get_default_executor()
+        best = None
+        for _ in range(trials):
+            store = _realtime_store(latency_ms, bw_mbps)
+            tier = RemoteTier(store, part_bytes=part_kb << 10, executor=ex)
+            t0 = time.perf_counter()
+            tier.write_bytes("blob", data)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+            # bit-identity: the reassembled object IS the blob
+            store.clock.realtime = False        # verification is free
+            assert tier.read_bytes("blob") == data, "upload corrupted blob"
+            assert tier.stats["parts_uploaded"] >= mb * 1024 // part_kb
+        times[mode] = best
+        emit(f"remote_upload_{mode}_{mb}MB,{best * 1e6:.0f},"
+             f"{mb / best:.1f} MB/s wall ({part_kb}KB parts, "
+             f"{latency_ms}ms RTT, {bw_mbps}MB/s per connection)")
+    speedup = times["serial"] / times["parallel"]
+    emit(f"remote_upload_speedup,{times['parallel'] * 1e6:.0f},"
+         f"parallel multipart {speedup:.2f}x over serial")
+    return speedup
+
+
+def bench_cold_vs_warm_restore(emit, *, mb=8, latency_ms=2.0,
+                               bw_mbps=200.0, trials=2):
+    """Dump once through a write-through cache, then restore cold (fresh
+    front) vs warm (filled front). Returns (cold_s, warm_s)."""
+    n = mb * (1 << 20) // 4 // 2
+    rng = np.random.default_rng(1)
+    tree = {"params": {"w": rng.standard_normal(n).astype(np.float32),
+                       "m": rng.standard_normal(n).astype(np.float32)},
+            "step": np.int32(1)}
+    store = _realtime_store(latency_ms, bw_mbps)
+    remote = RemoteTier(store, part_bytes=256 << 10)
+    store.clock.realtime = False                # dump cost is not measured
+    host_a = CachingTier(MemoryTier(), remote)
+    dump(tree, host_a, step=1, chunk_bytes=1 << 20)
+
+    def check(got):
+        assert np.array_equal(got["params"]["w"], tree["params"]["w"])
+        assert np.array_equal(got["params"]["m"], tree["params"]["m"])
+        assert got["step"] == tree["step"]
+
+    store.clock.realtime = True
+    cold = warm = None
+    for _ in range(trials):
+        host_b = CachingTier(MemoryTier(), remote)   # new host: cold front
+        t0 = time.perf_counter()
+        got, _ = restore(host_b)
+        dt = time.perf_counter() - t0
+        check(got)                                   # bit-identical, cold
+        cold = dt if cold is None else min(cold, dt)
+        t0 = time.perf_counter()
+        got2, _ = restore(host_b)                    # front now filled
+        dt = time.perf_counter() - t0
+        check(got2)                                  # bit-identical, warm
+        warm = dt if warm is None else min(warm, dt)
+    emit(f"remote_restore_cold_{mb}MB,{cold * 1e6:.0f},"
+         f"every chunk crossed the simulated network")
+    emit(f"remote_restore_warm_{mb}MB,{warm * 1e6:.0f},"
+         f"served from the write-through cache front")
+    emit(f"remote_restore_warm_speedup,{warm * 1e6:.0f},"
+         f"{cold / warm:.1f}x faster than cold")
+    return cold, warm
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized config; timing gates (parallel >= 2x "
+                         "serial, warm < cold) and bit-identity asserts "
+                         "are enforced in every mode")
+    ap.add_argument("--mb", type=int, default=0, help="upload blob size")
+    a = ap.parse_args(argv)
+    if a.smoke:
+        up = dict(mb=a.mb or 4, part_kb=128, latency_ms=3.0, bw_mbps=200.0,
+                  trials=2)
+        rs = dict(mb=4, latency_ms=2.0, bw_mbps=200.0, trials=2)
+    else:
+        up = dict(mb=a.mb or 16, part_kb=256, latency_ms=3.0,
+                  bw_mbps=200.0, trials=3)
+        rs = dict(mb=8, latency_ms=2.0, bw_mbps=200.0, trials=2)
+    speedup = bench_parallel_vs_serial_upload(print, **up)
+    cold, warm = bench_cold_vs_warm_restore(print, **rs)
+    assert speedup >= 2.0, \
+        f"parallel multipart only {speedup:.2f}x over serial (< 2x gate)"
+    assert warm < cold, \
+        f"warm-cache restore ({warm:.3f}s) not faster than cold ({cold:.3f}s)"
+    print(f"\n### remote transfer: parallel multipart {speedup:.1f}x over "
+          f"serial; warm-cache restore {cold / warm:.1f}x over cold "
+          f"(bit-identical restores asserted)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

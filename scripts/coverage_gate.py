@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Per-file coverage floor gate.
+
+Usage: coverage_gate.py <coverage.json> <file-suffix> <min-percent>
+
+Reads a ``coverage json`` report (pytest --cov ... --cov-report=json:...)
+and exits non-zero if the file whose path ends with <file-suffix> is
+missing from the report or covered below <min-percent>. Used by CI to
+hold core/remote.py at >= 90% — the fault-injection harness exists so
+every retry/repair branch is TESTED code; a coverage slide means a new
+branch went in without a schedule that reaches it."""
+import json
+import sys
+
+
+def main(argv) -> int:
+    if len(argv) != 4:
+        print(__doc__)
+        return 2
+    report_path, suffix, floor = argv[1], argv[2], float(argv[3])
+    with open(report_path) as f:
+        report = json.load(f)
+    hits = {path: info for path, info in report["files"].items()
+            if path.endswith(suffix)}
+    if not hits:
+        print(f"coverage gate: no file matching *{suffix} in "
+              f"{report_path} — was the module imported at all?")
+        return 1
+    failed = False
+    for path, info in sorted(hits.items()):
+        pct = info["summary"]["percent_covered"]
+        ok = pct >= floor
+        print(f"coverage gate: {path}: {pct:.1f}% "
+              f"({'>=' if ok else '<'} {floor:.0f}% floor)"
+              f"{' FAIL' if not ok else ''}")
+        if not ok:
+            missing = info.get("missing_lines", [])[:20]
+            print(f"  uncovered lines (first 20): {missing}")
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

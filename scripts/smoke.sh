@@ -11,4 +11,6 @@ exec python -m pytest -q \
     tests/test_checkpoint_properties.py \
     tests/test_api_session.py \
     tests/test_predump_lazy.py \
+    tests/test_remote_tier.py \
+    tests/test_remote_properties.py \
     "$@"

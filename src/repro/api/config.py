@@ -11,9 +11,10 @@ object here, so callers compose exactly the concerns they care about:
         preemption=PreemptionPolicy(install_signals=True),
         migration=MigrationPolicy(arch="qwen3-8b"))
 
-Tiers are URI-addressed (file://, mem://, or a plain path — see
-core.storage.as_tier); replica entries may also be pre-built Tier objects.
-All policies are frozen: a session's behavior is fixed at open time."""
+Tiers are URI-addressed (file://, mem://, remote://, cache+remote://, or
+a plain path — see core.storage.as_tier and core.remote.tier_from_uri);
+replica entries may also be pre-built Tier objects. All policies are
+frozen: a session's behavior is fixed at open time."""
 from __future__ import annotations
 
 import dataclasses
@@ -150,10 +151,11 @@ class MigrationPolicy:
 class SessionConfig:
     """Everything a CheckpointSession needs, in one typed object.
 
-    root/replicas: URI-addressed tiers (file://, mem://, plain path, or
-    Tier objects). chunk_bytes: chunk window override. serial: run the
-    single-threaded baseline engine. executor: share a CheckpointExecutor
-    across sessions (defaults to the process-wide pipelined engine).
+    root/replicas: URI-addressed tiers (file://, mem://, remote://,
+    cache+remote://, plain path, or Tier objects). chunk_bytes: chunk
+    window override. serial: run the single-threaded baseline engine.
+    executor: share a CheckpointExecutor across sessions (defaults to
+    the process-wide pipelined engine).
 
     Example::
 

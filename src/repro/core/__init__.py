@@ -38,6 +38,8 @@ from repro.core.plan import (DumpPlan, LeafPlan, RestorePlan, plan_dump,
                              plan_restore)
 from repro.core.preempt import EXIT_CHECKPOINTED, PreemptionHandler
 from repro.core.registry import Registry
+from repro.core.remote import (CachingTier, RemoteTier, SimulatedObjectStore,
+                               TransferError)
 from repro.core.restore import latest_image_id, read_manifest, restore
 from repro.core.storage import LocalDirTier, MemoryTier, as_tier
 from repro.core.state import serve_meta, train_meta

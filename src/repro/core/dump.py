@@ -64,24 +64,31 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
                      reuse_records=reuse_records)
 
     arrays = {p: np.asarray(a) for p, a in leaves}
-    out = ex.run_dump(plan, arrays, tier, replicas,
-                      prev_host_tree=prev_host_tree)
+    # the writer guard spans probe->write->commit: a concurrent gc on the
+    # SAME tier object (sessions sharing a mem://, remote:// or
+    # cache+remote:// URI) waits here instead of reaping chunks this dump
+    # has written but not yet referenced from a committed manifest
+    with tier.writer():
+        out = ex.run_dump(plan, arrays, tier, replicas,
+                          prev_host_tree=prev_host_tree)
 
-    man = manifest.build(plan.image_id, step=step, leaves=out["records"],
-                         meta=meta or {}, parent=parent,
-                         env=manifest.env_fingerprint(), topology=topology)
-    if num_processes > 1:
-        part = f"images/{plan.image_id}/manifest.part{process_index}.json"
-        tier.write_bytes(part, manifest.to_json(man))
-        if process_index == 0:
-            merge_parts(tier, plan.image_id, num_processes,
-                        replicas=replicas)
-    else:
-        blob = manifest.to_json(man)
-        tier.write_bytes(tier.manifest_path(plan.image_id), blob,
-                         atomic=True)
-        for r in replicas:
-            r.write_bytes(r.manifest_path(plan.image_id), blob, atomic=True)
+        man = manifest.build(plan.image_id, step=step, leaves=out["records"],
+                             meta=meta or {}, parent=parent,
+                             env=manifest.env_fingerprint(),
+                             topology=topology)
+        if num_processes > 1:
+            part = f"images/{plan.image_id}/manifest.part{process_index}.json"
+            tier.write_bytes(part, manifest.to_json(man))
+            if process_index == 0:
+                merge_parts(tier, plan.image_id, num_processes,
+                            replicas=replicas)
+        else:
+            blob = manifest.to_json(man)
+            tier.write_bytes(tier.manifest_path(plan.image_id), blob,
+                             atomic=True)
+            for r in replicas:
+                r.write_bytes(r.manifest_path(plan.image_id), blob,
+                              atomic=True)
     return {"image_id": plan.image_id, "stats": out["stats"],
             "records": man["leaves"]}
 

@@ -43,7 +43,8 @@ class CheckpointExecutor:
 
     def __init__(self, *, cpu_workers: int | None = None,
                  io_workers: int | None = None, serial: bool = False,
-                 use_chunk_index: bool | None = None):
+                 use_chunk_index: bool | None = None,
+                 transfer_workers: int | None = None):
         self.serial = serial
         self.use_chunk_index = (not serial) if use_chunk_index is None \
             else use_chunk_index
@@ -56,6 +57,9 @@ class CheckpointExecutor:
                 io_workers or 8, thread_name_prefix="ckpt-io")
         self._coord = None          # lazy: ordered async submission lane
         self._coord_lock = threading.Lock()
+        self._xfer = None           # lazy: remote transfer lanes
+        self._xfer_workers = transfer_workers or 8
+        self._xfer_lock = threading.Lock()
 
     # ------------------------------------------------------------------ dump
     def run_dump(self, plan, arrays: dict, tier, replicas=(),
@@ -265,6 +269,22 @@ class CheckpointExecutor:
             return None
         return self._cpu.submit(fn, *args)
 
+    # ------------------------------------------------------- transfer lanes
+    def submit_transfer(self, fn, *args) -> Future | None:
+        """Non-blocking submit onto the remote-transfer lanes — a pool
+        SEPARATE from the chunk io pool, because multipart part-uploads
+        fan out from INSIDE io-pool chunk writes: routing parts back onto
+        the io pool would deadlock once every io worker is a chunk write
+        blocked on its own parts. Returns None on a serial engine (the
+        caller runs parts inline). Used by RemoteTier; see core/remote.py."""
+        if self.serial:
+            return None
+        with self._xfer_lock:
+            if self._xfer is None:
+                self._xfer = ThreadPoolExecutor(
+                    self._xfer_workers, thread_name_prefix="ckpt-xfer")
+        return self._xfer.submit(fn, *args)
+
     # ----------------------------------------------------------- async lane
     def submit(self, fn) -> Future:
         """Enqueue fn on the single-threaded coordinator lane: jobs run
@@ -277,10 +297,10 @@ class CheckpointExecutor:
         return self._coord.submit(fn)
 
     def close(self):
-        for pool in (self._coord, self._cpu, self._io):
+        for pool in (self._coord, self._cpu, self._io, self._xfer):
             if pool is not None:
                 pool.shutdown(wait=True)
-        self._coord = self._cpu = self._io = None
+        self._coord = self._cpu = self._io = self._xfer = None
 
 
 _default: CheckpointExecutor | None = None

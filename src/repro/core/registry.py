@@ -167,7 +167,18 @@ class Registry:
         return deleted
 
     def gc(self) -> dict:
-        """Delete pool chunks not referenced by any retained manifest."""
+        """Delete pool chunks not referenced by any retained manifest.
+
+        Runs under the tier's exclusive reaper guard: a dump in flight on
+        the same tier object (a peer session sharing a mem://, remote://
+        or cache+remote:// URI) finishes its manifest commit before the
+        reference scan starts, so its chunks are never mistaken for
+        garbage (cross-process writers on a shared FS remain the
+        documented storage.py caveat)."""
+        with self.tier.reaper():
+            return self._gc_locked()
+
+    def _gc_locked(self) -> dict:
         referenced = set()
         for m in self.images():
             man = read_manifest(self.tier, m["image_id"])

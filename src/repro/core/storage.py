@@ -15,17 +15,60 @@ and an opt-in in-memory chunk index (``enable_chunk_index``) loaded with one
 The index is a cache owned by the writer: it stays correct as long as all
 chunk deletions on this tier instance go through ``delete_chunk`` (which is
 what ``Registry.gc`` does) — share one tier object between the dumper and
-its registry rather than constructing two over the same root, and never run
-gc from a *different* instance or process while a dumper with a live index
-writes (the same gc-vs-dedup race existed in the per-chunk-stat engine,
-just with a narrower window; see DESIGN.md §4)."""
+its registry rather than constructing two over the same root. In-process
+sharers of one tier OBJECT (mem://, remote://, cache+remote:// URIs all
+resolve to one object per process) are further protected by the
+writer/reaper guard below: gc waits out in-flight dumps instead of racing
+them. Running gc from a *different* tier instance or another process over
+the same root remains unsafe (the same gc-vs-dedup race existed in the
+per-chunk-stat engine, just with a narrower window; see DESIGN.md §4/§8)."""
 from __future__ import annotations
 
 import os
 import threading
 import time
+from contextlib import contextmanager
 
 _LOCK_INIT = threading.Lock()
+
+
+class RWGuard:
+    """Writers-vs-reaper lock for a storage namespace. Dumps hold the
+    shared ``writing`` side across their probe->write->commit window; gc
+    holds the exclusive ``reap`` side. One guard per backing STORE, not
+    per tier wrapper — every tier object addressing the same pool must
+    coordinate on the same guard (see Tier._guard_obj)."""
+
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.writers = 0
+        self.reaping = False
+
+    @contextmanager
+    def writing(self):
+        with self.cond:
+            while self.reaping:
+                self.cond.wait()
+            self.writers += 1
+        try:
+            yield self
+        finally:
+            with self.cond:
+                self.writers -= 1
+                self.cond.notify_all()
+
+    @contextmanager
+    def reap(self):
+        with self.cond:
+            while self.writers > 0 or self.reaping:
+                self.cond.wait()
+            self.reaping = True
+        try:
+            yield self
+        finally:
+            with self.cond:
+                self.reaping = False
+                self.cond.notify_all()
 
 
 class Tier:
@@ -35,6 +78,7 @@ class Tier:
 
     _chunk_index: set | None = None
     _chunk_index_lock: threading.Lock | None = None
+    _rw_guard: RWGuard | None = None
 
     @property
     def _index_lock(self) -> threading.Lock:
@@ -43,6 +87,37 @@ class Tier:
                 if self._chunk_index_lock is None:
                     self._chunk_index_lock = threading.Lock()
         return self._chunk_index_lock
+
+    # ---- write guard (in-process shared-tier coordination)
+    # A dump writes chunks BEFORE the manifest that references them, so a
+    # concurrent gc on the same pool cannot tell an in-flight dump's
+    # chunks from garbage. In-process sharers (mem://, remote://,
+    # cache+remote:// URIs resolve to one tier object per process, and
+    # tiers that WRAP another namespace delegate _guard_obj to it, so
+    # every alias of one pool shares one guard) coordinate here: dump()
+    # holds the shared side for its whole probe->write->commit window,
+    # Registry.gc() takes the exclusive side. Cross-process writers on a
+    # shared filesystem remain the documented caveat above.
+    def _guard_obj(self) -> RWGuard:
+        """The RWGuard for this tier's backing pool. Default: one per
+        tier object (lazy). RemoteTier delegates to its store's guard,
+        CachingTier to its cold layer's, so remote://ck and
+        cache+remote://ck — distinct tier objects over one store —
+        cannot run gc under each other's in-flight dumps."""
+        if self._rw_guard is None:
+            with _LOCK_INIT:
+                if self._rw_guard is None:
+                    self._rw_guard = RWGuard()
+        return self._rw_guard
+
+    def writer(self):
+        """Shared lock for a dump's probe->write->commit window."""
+        return self._guard_obj().writing()
+
+    def reaper(self):
+        """Exclusive lock for gc: waits out in-flight dumps, blocks new
+        ones while chunks are being reaped."""
+        return self._guard_obj().reap()
 
     def write_bytes(self, rel: str, data, atomic: bool = False):
         raise NotImplementedError
@@ -241,6 +316,18 @@ class MemoryTier(Tier):
             raise FileNotFoundError(rel)
         return sorted(names)
 
+    def read_chunk_range(self, h: str, offset: int, length: int) -> bytes:
+        """Sliced range read off the stored blob. The base implementation
+        routes through read_chunk() and slices a copy of the whole chunk;
+        here a lazy byte fault over mem:// copies ``length`` bytes, not
+        the chunk (4 MiB default) it lives in."""
+        rel = self.chunk_path(h)
+        with self._blobs_lock:
+            blob = self.blobs.get(rel)
+        if blob is None:
+            raise FileNotFoundError(rel)
+        return blob[offset:offset + length]
+
     def delete(self, rel: str):
         with self._blobs_lock:
             for k in [k for k in self.blobs
@@ -255,7 +342,7 @@ class MemoryTier(Tier):
 _MEM_TIERS: dict = {}
 _MEM_TIERS_LOCK = threading.Lock()
 
-TIER_SCHEMES = ("file", "mem")
+TIER_SCHEMES = ("file", "mem", "remote", "cache+remote")
 
 
 def as_tier(t) -> Tier:
@@ -265,7 +352,16 @@ def as_tier(t) -> Tier:
       file:///abs/path | file://rel/path   explicit local-directory tier
       mem://<name>                         process-local in-memory tier
                                            (same name -> same tier object)
+      remote://<name>[?params]             simulated object store with
+                                           retried, multipart transfers
+      cache+remote://<name>[?params]       write-through local cache over
+                                           the same remote back end
       plain path                           local-directory tier (back-compat)
+
+    remote:// and cache+remote:// are process-registered like mem:// (the
+    same URI is the same tier object) and configured by query parameters
+    — latency/bandwidth/fault model, retry budget, multipart geometry;
+    see core.remote.tier_from_uri.
 
     An unknown ``scheme://`` is an error — previously a typo'd URI such as
     ``s3://bucket/ck`` silently became a LocalDirTier at ``./s3:/bucket/ck``
@@ -284,6 +380,9 @@ def as_tier(t) -> Tier:
                 if name not in _MEM_TIERS:
                     _MEM_TIERS[name] = MemoryTier()
                 return _MEM_TIERS[name]
+        if scheme in ("remote", "cache+remote"):
+            from repro.core.remote import tier_from_uri
+            return tier_from_uri(scheme, rest)
         raise ValueError(
             f"unknown tier URI scheme {scheme!r} in {s!r}; supported "
             f"schemes: {', '.join(f'{x}://' for x in TIER_SCHEMES)} "

@@ -21,6 +21,24 @@ def tmp_ckpt(tmp_path):
     return str(tmp_path / "ckpt")
 
 
+@pytest.fixture
+def flaky_tier():
+    """Factory for fault-injected tiers (tests/faultinject.py): wraps any
+    Tier (or a path / URI string) in a seeded FlakyTier. The shared
+    fixture for replica-repair and retry tests — hand-corrupting files in
+    each test reinvents a worse version of this.
+
+        def test_x(flaky_tier, tmp_ckpt):
+            tier = flaky_tier(tmp_ckpt, corrupt_read_rate=0.5, seed=3)
+    """
+    from faultinject import FlakyTier
+
+    def make(inner, **schedule_kw):
+        from repro.core.storage import as_tier
+        return FlakyTier(as_tier(inner), **schedule_kw)
+    return make
+
+
 def subprocess_env():
     env = dict(os.environ)
     root = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -1,0 +1,146 @@
+"""Fault-injection harness: a seeded FlakyTier wrapper for ANY tier.
+
+Where ``core.remote.FaultPolicy`` injects faults inside the simulated
+object store (below the retry layer — the thing RemoteTier must survive),
+``FlakyTier`` wraps ABOVE any ``Tier`` and misbehaves the way broken
+storage actually misbehaves at the API boundary:
+
+  * **dropped writes** — write_bytes returns success, nothing lands
+    (the write-back cache that lied, the NFS server that acked and died);
+  * **corrupted reads** — read_bytes returns flipped bytes (bitrot,
+    truncation, a torn page) — the integrity layer must catch these by
+    hash, repair from a replica, or raise CorruptionError;
+  * **injected errors** — TimeoutError/IOError raised before the inner
+    call, on a seeded deterministic schedule.
+
+Every decision is a pure function of (seed, op, rel, attempt-count), so a
+test's fault pattern is reproducible no matter how threads interleave,
+and two FlakyTiers with the same seed misbehave identically. Shared
+pytest fixtures live in conftest.py (``flaky_tier``); the replica-repair
+and retry tests build on them instead of hand-corrupting files."""
+from __future__ import annotations
+
+import hashlib
+import threading
+
+from repro.core.storage import Tier
+
+
+class FaultSchedule:
+    """Deterministic per-(op, rel) misbehavior plan.
+
+    Rates are probabilities drawn from a hash of (seed, kind, op, rel) —
+    not a stream RNG — so the schedule is independent of call order.
+    ``error_budget`` bounds how many consecutive attempts of one (op, rel)
+    error out before the op is allowed through (mirrors transient-fault
+    reality and lets retry loops converge); ``error_budget=None`` makes
+    scheduled errors permanent."""
+
+    def __init__(self, seed: int = 0, drop_write_rate: float = 0.0,
+                 corrupt_read_rate: float = 0.0, error_rate: float = 0.0,
+                 error_budget: int | None = 1,
+                 errors: tuple = (TimeoutError, IOError),
+                 only: str = ""):
+        self.seed = int(seed)
+        self.drop_write_rate = float(drop_write_rate)
+        self.corrupt_read_rate = float(corrupt_read_rate)
+        self.error_rate = float(error_rate)
+        self.error_budget = error_budget
+        self.errors = tuple(errors)
+        self.only = only    # misbehave only on rels under this prefix
+        #                     (e.g. "chunks/": break data, spare manifests)
+
+    def _draw(self, kind: str, op: str, rel: str) -> float:
+        if self.only and not rel.startswith(self.only):
+            return 1.0                  # out of scope: never misbehaves
+        h = hashlib.blake2b(f"{self.seed}:{kind}:{op}:{rel}".encode(),
+                            digest_size=4).digest()
+        return int.from_bytes(h, "big") / 2**32
+
+    def drops(self, rel: str) -> bool:
+        return self._draw("drop", "write", rel) < self.drop_write_rate
+
+    def corrupts(self, rel: str) -> bool:
+        return self._draw("corrupt", "read", rel) < self.corrupt_read_rate
+
+    def errors_on(self, op: str, rel: str, attempt: int) -> bool:
+        if self._draw("error", op, rel) >= self.error_rate:
+            return False
+        return self.error_budget is None or attempt < self.error_budget
+
+    def error_for(self, op: str, rel: str, attempt: int) -> BaseException:
+        err = self.errors[attempt % len(self.errors)]
+        return err(f"flaky: injected {err.__name__} on {op} {rel!r}")
+
+
+class FlakyTier(Tier):
+    """Wrap any Tier with a seeded FaultSchedule (see module docstring).
+
+    Counters (``stats``): writes_dropped, reads_corrupted,
+    errors_injected — assert on them to prove a test actually exercised
+    the path it claims to."""
+
+    def __init__(self, inner: Tier, schedule: FaultSchedule | None = None,
+                 **schedule_kw):
+        self.inner = inner
+        self.schedule = schedule or FaultSchedule(**schedule_kw)
+        self.stats = {"writes_dropped": 0, "reads_corrupted": 0,
+                      "errors_injected": 0}
+        self._attempts: dict = {}
+        self._lock = threading.Lock()
+
+    def _gate(self, op: str, rel: str):
+        with self._lock:
+            attempt = self._attempts.get((op, rel), 0)
+            self._attempts[(op, rel)] = attempt + 1
+        if self.schedule.errors_on(op, rel, attempt):
+            with self._lock:
+                self.stats["errors_injected"] += 1
+            raise self.schedule.error_for(op, rel, attempt)
+
+    # ------------------------------------------------------------- contract
+    def write_bytes(self, rel: str, data, atomic: bool = False):
+        self._gate("write", rel)
+        if self.schedule.drops(rel):
+            with self._lock:
+                self.stats["writes_dropped"] += 1
+            return                      # acked, never landed
+        self.inner.write_bytes(rel, data, atomic=atomic)
+
+    def read_bytes(self, rel: str) -> bytes:
+        self._gate("read", rel)
+        data = self.inner.read_bytes(rel)
+        if self.schedule.corrupts(rel):
+            with self._lock:
+                self.stats["reads_corrupted"] += 1
+            flipped = bytearray(data or b"\0")
+            flipped[0] ^= 0xFF
+            return bytes(flipped)
+        return data
+
+    def read_chunk_range(self, h: str, offset: int, length: int) -> bytes:
+        rel = self.inner.chunk_path(h)
+        self._gate("read", rel)
+        data = self.inner.read_chunk_range(h, offset, length)
+        if self.schedule.corrupts(rel) and data:
+            with self._lock:
+                self.stats["reads_corrupted"] += 1
+            flipped = bytearray(data)
+            flipped[0] ^= 0xFF
+            return bytes(flipped)
+        return data
+
+    def exists(self, rel: str) -> bool:
+        self._gate("head", rel)
+        return self.inner.exists(rel)
+
+    def listdir(self, rel: str) -> list:
+        self._gate("list", rel)
+        return self.inner.listdir(rel)
+
+    def delete(self, rel: str):
+        self._gate("delete", rel)
+        self.inner.delete(rel)
+
+    def age_s(self, rel: str) -> float | None:
+        return self.inner.age_s(rel)

@@ -109,14 +109,71 @@ def test_pipelined_restore_repairs_from_replica(tmp_ckpt):
     assert trees_equal(tree, got2)
 
 
-def test_pipelined_corruption_without_replica_raises(tmp_ckpt):
+def test_pipelined_corruption_without_replica_raises(tmp_ckpt, flaky_tier):
     ck = Checkpointer(tmp_ckpt, chunk_bytes=4096)
     ck.save(med_tree(), step=1)
-    for chunk in glob.glob(os.path.join(tmp_ckpt, "chunks", "*.bin")):
-        with open(chunk, "wb") as f:
-            f.write(b"junk")
+    # every chunk READ returns flipped bytes (manifests spared) — the
+    # integrity layer must refuse, not hand back wrong numbers
+    bad = flaky_tier(tmp_ckpt, corrupt_read_rate=1.0, only="chunks/")
     with pytest.raises(CorruptionError):
-        ck.load_latest()
+        restore(bad)
+    assert bad.stats["reads_corrupted"] > 0
+
+
+def test_restore_repairs_through_flaky_primary(tmp_ckpt, flaky_tier):
+    """Bitrot at read time on the primary, clean replica: every leaf must
+    come back bit-identical via hash-verified replica reads (the shared
+    fault-injection fixture replaces per-test hand corruption)."""
+    mem = MemoryTier()
+    tree = med_tree()
+    Checkpointer(tmp_ckpt, replicas=[mem], chunk_bytes=4096).save(
+        tree, step=1)
+    bad = flaky_tier(tmp_ckpt, corrupt_read_rate=0.7, seed=11,
+                     only="chunks/")
+    got, _ = Checkpointer(bad, replicas=[mem]).load_latest()
+    assert trees_equal(tree, got)
+    assert bad.stats["reads_corrupted"] > 0
+
+
+def test_dropped_chunk_writes_covered_by_replica(tmp_ckpt, flaky_tier):
+    """A primary that ACKS chunk writes and loses them (lying write-back
+    cache): the dump still commits, and restore self-heals from the
+    replica — the paper's network-file-system row under a harsher fault
+    than CRIU ever tested."""
+    mem = MemoryTier()
+    bad = flaky_tier(tmp_ckpt, drop_write_rate=0.6, seed=7, only="chunks/")
+    tree = med_tree()
+    Checkpointer(bad, replicas=[mem], chunk_bytes=4096).save(tree, step=1)
+    assert bad.stats["writes_dropped"] > 0
+    got, _ = Checkpointer(tmp_ckpt, replicas=[mem]).load_latest()
+    assert trees_equal(tree, got)
+
+
+def test_transient_errors_storm_then_settle(tmp_ckpt, flaky_tier):
+    """Injected TimeoutError/IOError with a per-op budget: a one-shot
+    engine call fails loudly mid-storm; once the schedule's budget is
+    spent (transient fault passed), the SAME tier completes a clean dump
+    and a bit-identical restore — no torn image survives the storm."""
+    bad = flaky_tier(tmp_ckpt, error_rate=0.5, seed=3, error_budget=1)
+    tree = med_tree()
+    ck = Checkpointer(bad, chunk_bytes=4096, serial=True)
+    out = None
+    for _ in range(50):                 # each retry spends >=1 budget
+        try:
+            out = ck.save(tree, step=1)
+            break
+        except (TimeoutError, IOError):
+            continue
+    assert out is not None, "fault budget never drained"
+    assert bad.stats["errors_injected"] > 0
+    got = None
+    for _ in range(50):                 # reads spend their own budgets
+        try:
+            got, _ = ck.load(out["image_id"])
+            break
+        except (TimeoutError, IOError):
+            continue
+    assert got is not None and trees_equal(tree, got)
 
 
 # ------------------------------------------------- multi-process merge

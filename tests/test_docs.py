@@ -114,7 +114,11 @@ def test_docs_mention_the_new_knobs():
     post-copy features — the knobs must be findable there."""
     guide = (ROOT / "docs" / "operator-guide.md").read_text()
     for knob in ("pre_dump", "predump_rounds", "lazy=True",
-                 "prefetch_order", "materialize", "exit_code", "85"):
+                 "prefetch_order", "materialize", "exit_code", "85",
+                 # remote tier surface (ISSUE 5): URI schemes, retry
+                 # knobs, the typed failure, and the lazy-cold guidance
+                 "remote://", "cache+remote://", "TransferError",
+                 "attempts", "backoff_ms", "part_kb", "fail_rate"):
         assert knob in guide, f"operator guide lost mention of {knob!r}"
     readme = (ROOT / "README.md").read_text()
     assert 'mode="pre_dump"' in readme and "lazy=True" in readme

@@ -1,0 +1,146 @@
+"""Property tests for the remote tier's fault-tolerance invariants.
+
+Two promises, checked over randomized trees, transfer geometries and
+fault schedules (hypothesis when installed, seeded fixed examples via
+tests/_hypothesis_compat.py otherwise):
+
+  1. **Survivable schedule => bit-identical.** For EVERY fault schedule
+     whose per-op consecutive-failure count stays under the retry budget,
+     dump -> restore through the remote tier round-trips every leaf
+     bit-for-bit — transient storage faults are invisible to the image.
+  2. **Exhausted budget => typed error, never a silent partial image.**
+     A schedule that out-fails the budget raises TransferError (typed,
+     attributed), and the store is left with no restorable image and no
+     half-installed multipart object.
+"""
+import uuid
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: seeded fixed-example fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.dump import dump
+from repro.core.integrity import CorruptionError
+from repro.core.remote import (CachingTier, FaultPolicy, RemoteTier,
+                               RetryPolicy, SimulatedObjectStore,
+                               TransferError)
+from repro.core.restore import latest_image_id, restore
+from repro.core.storage import MemoryTier
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+ATTEMPTS = 4        # retry budget under test; schedules draw around it
+
+
+def _tree(seed, nleaves, n):
+    rng = np.random.default_rng(seed)
+    t = {"params": {}, "step": np.int32(seed % 1000)}
+    for i in range(nleaves):
+        t["params"][f"l{i}"] = rng.standard_normal(n).astype(np.float32)
+    return t
+
+
+def _remote(fail_seed, fail_rate, max_consecutive, part_kb=2,
+            fixed=None, cached=False):
+    store = SimulatedObjectStore(
+        faults=FaultPolicy(seed=fail_seed, fail_rate=fail_rate,
+                           max_consecutive=max_consecutive,
+                           fixed_failures=fixed))
+    tier = RemoteTier(store, retry=RetryPolicy(attempts=ATTEMPTS,
+                                               backoff_base_s=1e-4),
+                      part_bytes=part_kb << 10)
+    if cached:
+        return CachingTier(MemoryTier(), tier), store
+    return tier, store
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),   # tree seed
+       st.integers(min_value=0, max_value=2**31 - 1),   # fault seed
+       st.floats(min_value=0.0, max_value=1.0),         # fault rate
+       st.integers(min_value=1, max_value=ATTEMPTS - 1),  # consecutive
+       st.integers(min_value=1, max_value=4),            # leaves
+       st.sampled_from([1, 2, 8]))                       # part KiB
+def test_survivable_fault_schedules_are_invisible(
+        tree_seed, fault_seed, rate, consec, nleaves, part_kb):
+    tree = _tree(tree_seed, nleaves, 1500)
+    tier, store = _remote(fault_seed, rate, consec, part_kb=part_kb)
+    dump(tree, tier, step=1, chunk_bytes=4 << 10)
+    got, _ = restore(tier)
+    for p, leaf in tree["params"].items():
+        assert np.array_equal(got["params"][p], leaf)
+    assert got["step"] == tree["step"]
+    assert store.pending_multiparts == 0
+    # a survivable schedule never exhausts a budget, so every injected
+    # fault is answered by exactly one retry — none leak, none are free
+    assert tier.stats["retries"] == store.stats["faults_injected"]
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=ATTEMPTS, max_value=ATTEMPTS + 3))
+def test_budget_exceeded_is_typed_never_partial(tree_seed, failures):
+    tree = _tree(tree_seed, 3, 1500)
+    tier, store = _remote(0, 1.0, 1, fixed=failures)
+    with pytest.raises(TransferError) as ei:
+        dump(tree, tier, step=1, chunk_bytes=2 << 10)
+    assert ei.value.attempts == ATTEMPTS
+    assert isinstance(ei.value.last, (TimeoutError, IOError))
+    # never a silent partial image: no manifest committed, nothing to
+    # restore, no half-finished multipart hiding in the store
+    assert store.pending_multiparts == 0
+    clean = RemoteTier(store)       # fresh tier: no fault schedule state
+    store.faults = FaultPolicy()
+    assert latest_image_id(clean) is None
+    with pytest.raises(FileNotFoundError):
+        restore(clean)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=1, max_value=ATTEMPTS - 1))
+def test_cached_tier_inherits_fault_transparency(tree_seed, rate, consec):
+    """The write-through composition must not weaken promise 1: dump on a
+    warm cache, restore through a COLD cache over the same faulty store."""
+    tree = _tree(tree_seed, 2, 1500)
+    tier, store = _remote(tree_seed % 97, rate, consec, cached=True)
+    dump(tree, tier, step=1, chunk_bytes=4 << 10)
+    cold = CachingTier(MemoryTier(), tier.cold)
+    got, _ = restore(cold)
+    for p, leaf in tree["params"].items():
+        assert np.array_equal(got["params"][p], leaf)
+
+
+@given(st.binary(min_size=0, max_size=9000),
+       st.integers(min_value=1, max_value=8))
+def test_multipart_split_reassembles_any_blob(data, part_kb):
+    """write_bytes -> read_bytes is identity for every size around the
+    multipart threshold (empty, sub-part, exact multiples, ragged tail)."""
+    store = SimulatedObjectStore()
+    t = RemoteTier(store, part_bytes=part_kb << 10)
+    rel = f"b/{uuid.uuid4().hex[:8]}"
+    t.write_bytes(rel, data)
+    assert t.read_bytes(rel) == data
+    for off in (0, len(data) // 2):
+        ln = max(1, len(data) // 3)
+        assert store.get_range(rel, off, ln) == data[off:off + ln]
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.0, max_value=1.0))
+def test_corruption_remains_typed_under_fault_storms(seed, rate):
+    """Faults and corruption compose: a corrupt chunk behind a flaky
+    remote still surfaces as CorruptionError (integrity layer), not as
+    wrong numbers and not as an unhandled injection."""
+    tree = _tree(seed, 2, 1200)
+    tier, store = _remote(seed % 89, rate, ATTEMPTS - 1)
+    out = dump(tree, tier, step=1, chunk_bytes=2 << 10)
+    victim = next(iter(
+        r["chunks"][0] for r in out["records"] if r["chunks"]))
+    key = tier._k(tier.chunk_path(victim))
+    store._objects[key] = b"bitrot" + store._objects[key][6:]
+    with pytest.raises(CorruptionError):
+        restore(tier)

@@ -1,0 +1,482 @@
+"""Remote object-store tier + write-through cache: unit, integration and
+concurrency tests.
+
+Covers the full ISSUE-5 surface: multipart transfer geometry, bounded
+retry with virtual-clock backoff (tests never sleep), typed TransferError
+on budget exhaustion with no partial object left behind, the
+remote:// / cache+remote:// URI schemes end-to-end through dump, restore,
+pre-dump reuse, migration resume on a "new host" and lazy byte-range
+faults, the MemoryTier.read_chunk_range regression, and two writer
+sessions racing one gc on a shared cache+remote tier."""
+import threading
+import time
+import uuid
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSession, RestoreRequest, RetentionPolicy,
+                       SessionConfig)
+from repro.core import Registry, restore
+from repro.core.dump import dump
+from repro.core.lazy import lazy_restore
+from repro.core.remote import (CachingTier, FaultPolicy, NetworkModel,
+                               RemoteTier, RetryPolicy, SimulatedObjectStore,
+                               TransferError, get_store)
+from repro.core.storage import MemoryTier, as_tier
+
+
+def tree_of(seed=0, n=4096):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": rng.standard_normal(n).astype(np.float32),
+                       "frozen": np.zeros(n, np.float32)},
+            "step": np.int32(seed)}
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def fresh_uri(scheme="remote", params=""):
+    return f"{scheme}://t_{uuid.uuid4().hex[:10]}{params}"
+
+
+# ------------------------------------------------------------ URI schemes
+def test_remote_uri_resolves_memoized():
+    uri = fresh_uri()
+    t = as_tier(uri)
+    assert isinstance(t, RemoteTier)
+    assert as_tier(uri) is t                    # same URI -> same object
+
+
+def test_cache_remote_uri_resolves_memoized_and_shares_store():
+    name = f"s_{uuid.uuid4().hex[:10]}"
+    c = as_tier(f"cache+remote://{name}")
+    r = as_tier(f"remote://{name}")
+    assert isinstance(c, CachingTier) and isinstance(r, RemoteTier)
+    assert c.cold.store is r.store              # one backing store
+    assert as_tier(f"cache+remote://{name}") is c
+
+
+def test_uri_aliases_share_tier_guard_and_clock_config():
+    """Regression: every alias of one store must coordinate on ONE
+    writer/reaper guard (param-variant URIs are the same tier; the cache
+    composition wraps the memoized remote tier), and a late ?realtime=1
+    variant must NOT flip an in-use virtual clock into wall sleeps."""
+    name = f"alias_{uuid.uuid4().hex[:10]}"
+    r = as_tier(f"remote://{name}")
+    assert as_tier(f"remote://{name}?attempts=9") is r      # params ignored
+    c = as_tier(f"cache+remote://{name}")
+    assert c.cold is r                                      # one cold tier
+    assert c._guard_obj() is r._guard_obj() is r.store.rw_guard
+    assert as_tier(f"remote://{name}?realtime=1") is r
+    assert not r.store.clock.realtime                       # unchanged
+    # the guard actually excludes: a writer through one alias blocks a
+    # reaper through the other
+    with c.writer():
+        got = []
+        th = threading.Thread(
+            target=lambda: (r.reaper().__enter__(), got.append("reaped")))
+        th.start()
+        th.join(timeout=0.2)
+        assert not got                                      # still waiting
+    th.join(timeout=2.0)
+    assert got == ["reaped"]                                # released
+
+
+def test_unknown_scheme_still_rejected():
+    with pytest.raises(ValueError, match="unknown tier URI scheme"):
+        as_tier("s3://bucket/ck")
+
+
+def test_uri_params_configure_simulation():
+    uri = fresh_uri(params="?latency_ms=2&fail_rate=0.5&attempts=7"
+                           "&part_kb=64&seed=9")
+    t = as_tier(uri)
+    assert t.retry.attempts == 7
+    assert t.part_bytes == 64 << 10
+    assert t.store.network.latency_s == pytest.approx(0.002)
+    assert t.store.faults.fail_rate == pytest.approx(0.5)
+    assert not t.store.clock.realtime           # tests never sleep...
+    t2 = as_tier(fresh_uri(params="?realtime=1"))
+    assert t2.store.clock.realtime              # ...benchmarks opt in
+
+
+def test_session_config_accepts_remote_uris():
+    sess = CheckpointSession(SessionConfig(root=fresh_uri("cache+remote")))
+    tree = tree_of(1)
+    sess.save(tree, step=1)
+    got, _ = sess.load_latest()
+    assert trees_equal(tree, got)
+
+
+# -------------------------------------------------------------- multipart
+def test_multipart_geometry_and_roundtrip():
+    store = SimulatedObjectStore()
+    t = RemoteTier(store, part_bytes=1 << 10)
+    data = np.arange(3000, dtype=np.uint8).tobytes() * 4   # ~12 KB
+    t.write_bytes("chunks/big.bin", data)
+    assert t.read_bytes("chunks/big.bin") == data
+    nparts = -(-len(data) // (1 << 10))
+    assert t.stats == {"retries": 0, "parts_uploaded": nparts,
+                       "multipart_uploads": 1, "singlepart_uploads": 0}
+    assert store.stats["mp_completed"] == 1
+    t.write_bytes("images/i/manifest.json", b"{}")      # small: single put
+    assert t.stats["singlepart_uploads"] == 1
+
+
+def test_incomplete_multipart_is_invisible():
+    store = SimulatedObjectStore()
+    uid = store.initiate_multipart("k")
+    store.put_part("k", uid, 0, b"half")
+    with pytest.raises(FileNotFoundError):
+        store.get("k")
+    assert not store.head("k")
+
+
+def test_multipart_serial_engine_uploads_inline():
+    from repro.core.executor import CheckpointExecutor
+    store = SimulatedObjectStore()
+    t = RemoteTier(store, part_bytes=1 << 10,
+                   executor=CheckpointExecutor(serial=True))
+    data = bytes(5 << 10)
+    t.write_bytes("k", data)                    # no transfer lanes: inline
+    assert t.read_bytes("k") == data
+    assert t.stats["parts_uploaded"] == 5
+
+
+def test_part_upload_failure_aborts_whole_multipart():
+    """Break ONLY the part-upload leg: initiate/complete would succeed,
+    but a part exhausts its budget — the upload must abort (no leaked
+    multipart state, no object) and surface as TransferError."""
+    store = SimulatedObjectStore(
+        faults=FaultPolicy(fixed_failures=99, ops=("put_part",)))
+    t = RemoteTier(store, retry=RetryPolicy(attempts=2,
+                                            backoff_base_s=1e-4),
+                   part_bytes=1 << 10)
+    with pytest.raises(TransferError) as ei:
+        t.write_bytes("big", bytes(4 << 10))
+    assert ei.value.op == "put_part"
+    assert store.pending_multiparts == 0
+    assert store.stats["mp_aborted"] == 1
+    assert not store.head("big")
+
+
+def test_store_multipart_misuse_is_an_error():
+    store = SimulatedObjectStore()
+    with pytest.raises(IOError, match="unknown multipart"):
+        store.put_part("k", "mp-404", 0, b"x")
+    with pytest.raises(IOError, match="unknown multipart"):
+        store.complete_multipart("k", "mp-404", 1)
+    uid = store.initiate_multipart("k")
+    store.put_part("k", uid, 1, b"x")           # part 0 never arrives
+    with pytest.raises(IOError, match="missing parts"):
+        store.complete_multipart("k", uid, 2)
+
+
+def test_remote_age_s_runs_on_store_clock():
+    store = SimulatedObjectStore(network=NetworkModel(latency_s=0.5))
+    t = RemoteTier(store)
+    t.write_bytes("a", b"x")
+    assert t.age_s("a") == 0.0                  # just written
+    store.clock.advance(3.0)                    # virtual: no sleep
+    assert t.age_s("a") == pytest.approx(3.0)
+    assert t.age_s("never-written") is None
+    with pytest.raises(FileNotFoundError):
+        store.get_range("never-written", 0, 1)
+
+
+def test_network_model_charges_latency_and_bandwidth():
+    m = NetworkModel(latency_s=0.01, bandwidth_bps=1e6)
+    assert m.cost_s(0) == pytest.approx(0.01)
+    assert m.cost_s(500_000) == pytest.approx(0.51)
+    clock = SimulatedObjectStore().clock
+    clock.realtime = True
+    wall = time.monotonic()
+    clock.advance(0.02)                         # realtime: genuinely sleeps
+    assert time.monotonic() - wall >= 0.015
+    assert clock.now == pytest.approx(0.02)
+
+
+# ---------------------------------------------------------- retry/backoff
+def test_transient_faults_retried_on_virtual_clock():
+    store = SimulatedObjectStore(
+        faults=FaultPolicy(seed=1, fail_rate=1.0, max_consecutive=2))
+    t = RemoteTier(store, retry=RetryPolicy(attempts=4, backoff_base_s=0.5))
+    wall = time.monotonic()
+    t.write_bytes("x", b"payload")
+    assert time.monotonic() - wall < 0.4        # backoff never wall-slept
+    assert t.stats["retries"] > 0
+    assert store.clock.now >= 0.5               # ...but WAS charged
+    assert t.read_bytes("x") == b"payload"
+
+
+def test_backoff_is_exponential_and_capped():
+    calls = []
+    p = RetryPolicy(attempts=4, backoff_base_s=0.1, backoff_max_s=0.25)
+    boom = [3]
+
+    def fn():
+        if boom[0]:
+            boom[0] -= 1
+            raise TimeoutError("x")
+        return "ok"
+    assert p.call("put", "k", fn, sleep=calls.append) == "ok"
+    assert calls == [0.1, 0.2, 0.25]            # 2**k, capped
+
+
+def test_budget_exhausted_raises_typed_error_no_partial_object():
+    store = SimulatedObjectStore(faults=FaultPolicy(fixed_failures=99))
+    t = RemoteTier(store, retry=RetryPolicy(attempts=3,
+                                            backoff_base_s=0.001),
+                   part_bytes=1 << 10)
+    with pytest.raises(TransferError) as ei:
+        t.write_bytes("small", b"x")
+    assert ei.value.attempts == 3
+    with pytest.raises(TransferError):
+        t.write_bytes("big", bytes(8 << 10))    # multipart path
+    assert store.pending_multiparts == 0        # aborted, not leaked
+    clean = SimulatedObjectStore()
+    clean._objects.update(store._objects)
+    assert not clean._objects                   # nothing ever installed
+
+
+def test_missing_object_is_not_retried():
+    store = SimulatedObjectStore()
+    t = RemoteTier(store)
+    with pytest.raises(FileNotFoundError):
+        t.read_bytes("nope")
+    assert t.stats["retries"] == 0
+
+
+# ------------------------------------------------------------ cache layer
+def test_write_through_and_read_through_fill():
+    store = SimulatedObjectStore()
+    remote = RemoteTier(store)
+    hot = MemoryTier()
+    c = CachingTier(hot, remote)
+    c.write_bytes("chunks/aa.bin", b"data")
+    assert hot.read_bytes("chunks/aa.bin") == b"data"       # both layers
+    assert remote.read_bytes("chunks/aa.bin") == b"data"
+    c2 = CachingTier(MemoryTier(), remote)                  # cold front
+    gets = store.stats["gets"]
+    assert c2.read_bytes("chunks/aa.bin") == b"data"        # fills...
+    assert c2.read_bytes("chunks/aa.bin") == b"data"
+    assert store.stats["gets"] == gets + 1                  # ...once
+    assert c2.stats == {"hot_hits": 1, "cold_reads": 1, "fills": 1}
+
+
+def test_dedup_probe_answered_from_cache_index():
+    c = as_tier(fresh_uri("cache+remote"))
+    sess = CheckpointSession(c)
+    tree = tree_of(2)
+    sess.save(tree, step=1)
+    store = c.cold.store
+    ops = store.stats["ops"]
+    out = sess.save(tree_of(2, n=4096) | {"step": np.int32(2)}, step=2)
+    assert out["stats"]["chunks_deduped"] > 0
+    # the dedup decision itself added no per-chunk remote round trips:
+    # probes were answered by the in-memory indexes (ops grow only for
+    # the genuinely new writes — step leaf + manifest — and gc's listings)
+    assert store.stats["ops"] - ops <= 8
+
+
+def test_gc_and_retention_forward_to_both_layers():
+    c = as_tier(fresh_uri("cache+remote"))
+    sess = CheckpointSession(c, retention=RetentionPolicy(keep_last=1))
+    sess.save(tree_of(1), step=1)
+    sess.save(tree_of(2), step=2)       # distinct content: step-1 chunks die
+    reg = Registry(c)
+    assert [m["step"] for m in reg.images()] == [2]
+    hot_chunks = set(c.hot.listdir("chunks"))
+    cold_chunks = set(c.cold.listdir("chunks"))
+    assert hot_chunks == cold_chunks    # reaped (and kept) in lock-step
+    man_chunks = set()
+    from repro.core.restore import read_manifest
+    for rec in read_manifest(c, reg.images()[0]["image_id"])["leaves"]:
+        man_chunks.update(rec["chunks"])
+    assert {n.removesuffix(".bin") for n in cold_chunks} == man_chunks
+
+
+def test_cache_dedup_probe_without_index_prefers_hot():
+    """Index-free fallback: a hot hit answers the probe (sound by the
+    hot-subset-of-cold invariant) without a remote HEAD; hot misses fall
+    through to the cold layer."""
+    store = SimulatedObjectStore()
+    remote = RemoteTier(store)
+    c = CachingTier(MemoryTier(), remote)
+    assert not c.chunk_index_enabled()
+    hh, hc = "aa" * 32, "bb" * 32
+    c.write_chunk(hh, b"hot+cold")
+    remote.write_chunk(hc, b"cold-only")
+    heads = store.stats["ops"]
+    assert c.has_chunk(hh)                      # hot hit: no remote op
+    assert store.stats["ops"] == heads
+    assert c.has_chunk(hc)                      # hot miss -> cold HEAD
+    assert store.stats["ops"] == heads + 1
+    assert c.has_chunks({hh, hc, "cc" * 32}) == {hh, hc}
+
+
+def test_cache_chunk_surface_forwards_to_both_layers():
+    store = SimulatedObjectStore()
+    remote = RemoteTier(store)
+    hot = MemoryTier()
+    c = CachingTier(hot, remote)
+    h = "aa" * 32
+    blob = bytes(range(200))
+    c.enable_chunk_index()
+    assert c.chunk_index_enabled()
+    c.write_chunk(h, blob)
+    assert hot.has_chunk(h) and remote.has_chunk(h) and c.has_chunk(h)
+    # range reads: hot hit first, cold pass-through (no promotion) after
+    # the hot copy disappears
+    assert c.read_chunk_range(h, 10, 5) == blob[10:15]
+    assert c.stats["hot_hits"] == 1
+    hot.delete_chunk(h)
+    assert c.read_chunk_range(h, 10, 5) == blob[10:15]
+    assert c.stats["cold_reads"] == 1
+    assert not hot.has_chunk(h)                 # range read did NOT fill
+    # dedup probe falls through to cold for hot-missing chunks
+    assert c.has_chunks({h}) == {h}
+    c.note_chunk_present(h)                     # repair-path index upkeep
+    c.delete_chunk(h)
+    assert not c.has_chunk(h)
+    # age prefers the cold (durable) layer's answer
+    c.write_bytes("x", b"1")
+    assert c.age_s("x") == 0.0                  # remote virtual clock
+    assert c.age_s("never") is None
+
+
+# ----------------------------------------------- engine paths over remote
+def test_predump_reuse_over_cache_remote():
+    sess = CheckpointSession(fresh_uri("cache+remote"))
+    tree = tree_of(3)
+    sess.pre_dump(tree, step=1)
+    tree2 = {"params": dict(tree["params"]), "step": np.int32(2)}
+    tree2["params"]["w"] = tree["params"]["w"] + 1.0        # frozen stays
+    out = sess.save(tree2, step=2)
+    assert out["stats"]["leaves_reused"] >= 1               # reuse path OK
+    got, _ = sess.load_latest()
+    assert trees_equal(tree2, got)
+
+
+def test_migration_resume_on_new_host_over_remote():
+    """Dump on host A through its cache; resume on host B = a fresh cache
+    over the same object store. The typed restore path (resume: topology
+    plan, digest verification) must work unchanged."""
+    name = f"mig_{uuid.uuid4().hex[:8]}"
+    store = get_store(name)
+    host_a = CachingTier(MemoryTier(), RemoteTier(store))
+    tree = tree_of(5)
+    CheckpointSession(host_a).save(tree, step=7)
+    host_b = CachingTier(MemoryTier(), RemoteTier(store))
+    res = CheckpointSession(host_b).restore(RestoreRequest())
+    assert res.step == 7
+    assert trees_equal(tree, res.state)
+    assert host_b.stats["cold_reads"] > 0       # genuinely came remote
+
+
+def test_lazy_restore_faults_ranged_reads_over_remote():
+    t = as_tier(fresh_uri())
+    tree = tree_of(6, n=8192)
+    dump(tree, t, step=1, chunk_bytes=8 << 10)
+    state, man, srv = lazy_restore(t, prefetch=False)
+    assert srv.remaining == len(srv.paths())
+    got = state["params"]["w"]                  # fault one leaf
+    assert np.array_equal(got, tree["params"]["w"])
+    assert srv.stats["faults"] == 1
+    # byte-range fault: a ranged GET moves `length` bytes, not the chunk
+    out_before = t.store.stats["bytes_out"]
+    first_kb = srv.read_range("params/frozen", 0, 1024)
+    assert first_kb == np.asarray(tree["params"]["frozen"]).tobytes()[:1024]
+    assert t.store.stats["bytes_out"] - out_before <= 2048
+    assert trees_equal(tree, state.materialize())
+
+
+# ------------------------------------------- MemoryTier.read_chunk_range
+def test_memory_tier_range_read_is_sliced_not_whole_chunk():
+    """Regression (ISSUE 5): MemoryTier inherited the base
+    read_chunk_range, which routes through read_chunk() — every lazy byte
+    fault over mem:// materialized (and sliced a copy of) the whole
+    chunk. The override must serve the slice directly."""
+    t = MemoryTier()
+    blob = bytes(range(256)) * 16
+    h = "ab" * 32
+    t.write_bytes(t.chunk_path(h), blob)
+    assert t.read_chunk_range(h, 100, 7) == blob[100:107]
+    assert t.read_chunk_range(h, 0, 10**9) == blob          # clamped
+    with pytest.raises(FileNotFoundError):
+        t.read_chunk_range("cd" * 32, 0, 1)
+    # it must NOT route through read_chunk (the whole-chunk copy path)
+    t.read_chunk = None                                     # would TypeError
+    assert t.read_chunk_range(h, 5, 5) == blob[5:10]
+
+
+def test_lazy_range_reads_over_mem_uri():
+    t = as_tier(f"mem://rr_{uuid.uuid4().hex[:8]}")
+    tree = tree_of(7, n=8192)
+    dump(tree, t, step=1, chunk_bytes=4 << 10)
+    state, _, srv = lazy_restore(t, prefetch=False)
+    want = np.asarray(tree["params"]["w"]).tobytes()
+    assert srv.read_range("params/w", 64, 128) == want[64:192]
+    assert srv.stats["faults"] == 0             # range read, no leaf fault
+
+
+# ------------------------------------------------------- concurrency: gc
+def test_two_writers_one_gc_shared_cache_remote_tier():
+    """Two sessions stream pre-dump rounds through ONE cache+remote tier
+    while a third thread runs gc in a loop. The tier's writer/reaper
+    guard must keep gc from reaping chunks a dump has written but not yet
+    committed: afterwards EVERY committed image restores bit-identically,
+    and both layers' in-memory chunk indexes exactly match their pools
+    (dedup stats consistent)."""
+    uri = fresh_uri("cache+remote")
+    tier = as_tier(uri)
+    written: dict = {}
+    errors: list = []
+    stop = threading.Event()
+
+    def writer(wid):
+        try:
+            sess = CheckpointSession(
+                uri, retention=RetentionPolicy(keep_last=100))
+            for i in range(5):
+                step = wid * 1000 + i
+                tree = tree_of(seed=step, n=2048)
+                out = sess.pre_dump(tree, step=step)
+                written[(wid, out["image_id"])] = tree
+        except BaseException as e:   # pragma: no cover - failure reporting
+            errors.append(e)
+
+    def reaper():
+        reg = Registry(tier)
+        while not stop.is_set():
+            reg.gc()
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in (1, 2)]
+    gc_thread = threading.Thread(target=reaper)
+    gc_thread.start()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    stop.set()
+    gc_thread.join()
+    assert not errors, errors
+    assert len(written) == 10
+    for (_, image_id), tree in written.items():
+        got, _ = restore(tier, image_id)        # no live chunk was reaped
+        assert trees_equal(tree, got), image_id
+    for layer in (tier.hot, tier.cold):
+        if layer._chunk_index is not None:      # index == reality
+            names = {n.removesuffix(".bin")
+                     for n in layer.listdir("chunks")}
+            assert layer._chunk_index == names
+    # cross-session dedup stayed consistent: the shared all-zeros leaf
+    # lives in the pool exactly once, not once per writer
+    zeros = np.zeros(2048, np.float32)
+    from repro.core.chunking import chunk_views, leaf_to_bytes
+    zh = [h for h, _ in chunk_views(leaf_to_bytes(zeros), 4 << 20)]
+    assert tier.has_chunks(set(zh)) == set(zh)
