@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: check test lint api-check docs-check cov-remote bench-compare \
 	bench-smoke bench-facade bench-migration bench-stw bench-remote \
-	run-example
+	bench-codec run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -50,6 +50,12 @@ bench-smoke:
 # legacy Checkpointer calls (same engine underneath)
 bench-facade:
 	python benchmarks/ckpt_throughput.py --facade
+
+# device-codec gate: fused device encode+digest must be >= 1.5x the host
+# codec (encode_leaf + blake2b classification) with byte-identical stored
+# buffers and bit-identical restores; records BENCH_<pr>.json
+bench-codec:
+	python benchmarks/ckpt_throughput.py --codec-compare
 
 # preempt->exit-85 and restore-on-new-topology latency
 bench-migration:

@@ -1,0 +1,60 @@
+"""BENCH_<pr>.json — the versioned perf trajectory, one snapshot per PR.
+
+Benchmarks that gate or track a perf claim record their headline numbers
+here so regressions are visible ACROSS PRs, not just within one run:
+``benchmarks/ckpt_throughput.py --codec-compare`` writes the ``codec``
+section (host vs fused-device bytes/sec), ``benchmarks/stop_the_world.py``
+writes ``stop_the_world`` (freeze window), and ``benchmarks/roofline.py``
+annotates the codec section with its roofline fraction under the selected
+hardware model. CI uploads the file as an artifact; the committed copy is
+the trajectory point for this PR.
+
+Sections merge: each benchmark owns one key and may run independently, so
+a partial re-run never clobbers the other sections. Writes are atomic
+(tmp + rename) so a crashed benchmark can't leave a torn file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+PR = 6          # bump per growth PR: the file is BENCH_<PR>.json
+SCHEMA = 1
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_path(root: str | None = None) -> str:
+    return os.path.join(root or repo_root(), f"BENCH_{PR}.json")
+
+
+def read(root: str | None = None) -> dict:
+    """The current snapshot (empty skeleton if none recorded yet)."""
+    path = bench_path(root)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"schema": SCHEMA, "pr": PR, "sections": {}}
+
+
+def update(section: str, payload: dict, root: str | None = None) -> str:
+    """Merge one benchmark's section into BENCH_<PR>.json; returns path."""
+    doc = read(root)
+    doc.setdefault("sections", {})[section] = payload
+    doc["generated_unix"] = int(time.time())
+    path = bench_path(root)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=".bench_", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path

@@ -1,8 +1,11 @@
 """Checkpoint-path performance: dump/restore bandwidth, incremental savings,
-async overlap, codec ratios. (The paper reports no timings — this is the
-quantitative extension of its §2 procedure.)"""
+async overlap, codec ratios, and the host-vs-device codec gate. (The paper
+reports no timings — this is the quantitative extension of its §2
+procedure.)"""
 from __future__ import annotations
 
+import os
+import sys
 import tempfile
 import time
 
@@ -12,6 +15,9 @@ import numpy as np
 
 from repro.core import Checkpointer
 from repro.core.compression import default_policy
+
+sys.path.append(os.path.dirname(os.path.abspath(__file__)))
+import bench_record  # noqa: E402
 
 
 def synth_state(mb: int, seed=0):
@@ -219,6 +225,136 @@ def bench_compare(emit, leaves=24, mb_per_leaf=4, chunk_mb=1,
     return speed
 
 
+def bench_codec_compare(emit, mb=64, trials=3, strict=True, record=True):
+    """Host codec vs the fused device encode+digest path, per codec.
+
+    The fused kernel replaces TWO host passes in the dump hot loop: the
+    numpy ``encode_leaf`` and the blake2b classification digest the
+    incremental/pre-dump tracker takes over every leaf (predump.leaf_digest
+    — the fused payload digest serves the same reuse-classification role
+    for device-encoded leaves). So the host side is timed as
+    encode_leaf + blake2b(raw leaf), the device side as the jitted fused
+    op + device->host landing + digest fold — exactly what
+    core/device_codec.py pays per leaf.
+
+    Hard asserts in every mode (--smoke included):
+      * stored buffers are byte-identical between the two paths, AND
+      * a real dump/restore round trip with device="on" vs "off" restores
+        bit-identical trees.
+    The >=1.5x speedup is asserted only when ``strict`` (make bench-codec);
+    CI smoke reports it informationally. ``record`` writes the ``codec``
+    section of BENCH_<pr>.json (benchmarks/bench_record.py)."""
+    from repro.core.compression import CODEC_BLOCK, encode_leaf
+    from repro.core.predump import leaf_digest
+    from repro.kernels.ckpt_codec import ops
+
+    n = mb * (1 << 20) // 4
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(n, dtype=np.float32)
+    prev = x + rng.standard_normal(n, dtype=np.float32) * 0.01
+    xd, pd = jnp.asarray(x), jnp.asarray(prev)
+
+    def best_of(f):
+        best, out = float("inf"), None
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            out = f()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    def host_delta8():
+        stored, _ = encode_leaf(x, "delta8", prev)
+        leaf_digest(x)                     # reuse-classification pass
+        return stored
+
+    def host_bf16():
+        stored, _ = encode_leaf(x, "bf16", None)
+        leaf_digest(x)
+        return stored
+
+    def dev_delta8():
+        q, s, d, h1, h2 = jax.device_get(
+            ops.delta_encode_digest(xd, pd, block=CODEC_BLOCK))
+        stored = np.concatenate([s.view(np.int8).reshape(-1),
+                                 q.reshape(-1)])
+        ops.fold_digest(h1, h2, scale_bits=s, n=n)
+        return stored
+
+    def dev_bf16():
+        y, h1, h2 = jax.device_get(
+            ops.bf16_encode_digest(xd, block=CODEC_BLOCK))
+        ops.fold_digest(h1, h2, n=n)
+        return np.asarray(y).reshape(-1)[:n]
+
+    results = {}
+    for codec, host_fn, dev_fn in (("delta8", host_delta8, dev_delta8),
+                                   ("bf16", host_bf16, dev_bf16)):
+        dev_fn()                           # compile outside the timing
+        host_dt, stored_h = best_of(host_fn)
+        dev_dt, stored_d = best_of(dev_fn)
+        a = np.ascontiguousarray(stored_h).view(np.uint8).reshape(-1)
+        b = np.ascontiguousarray(stored_d).view(np.uint8).reshape(-1)
+        assert np.array_equal(a, b), \
+            f"{codec}: device stored bytes != host stored bytes"
+        raw = n * 4
+        speed = host_dt / dev_dt
+        results[codec] = {"raw_bytes": raw,
+                          "host_Bps": raw / host_dt,
+                          "device_Bps": raw / dev_dt,
+                          "speedup": speed}
+        emit(f"ckpt_codec_host_{codec},{host_dt * 1e6:.0f},"
+             f"{raw / host_dt / 1e9:.3f} GB/s (encode_leaf + blake2b)")
+        emit(f"ckpt_codec_device_{codec},{dev_dt * 1e6:.0f},"
+             f"{raw / dev_dt / 1e9:.3f} GB/s fused encode+digest "
+             f"({speed:.2f}x, bit-identical stored bytes)")
+
+    # end-to-end bit-identity: device="on" vs "off" dumps restore the same
+    from repro.api import (CheckpointSession, CodecPolicy, DumpRequest,
+                           RestoreRequest, SessionConfig)
+    small = {"params": {"w": jnp.asarray(x[: 1 << 20])},
+             "opt": {"m": {"w": jnp.asarray(prev[: 1 << 20])}},
+             "step": jnp.asarray(1, jnp.int32)}
+    step2 = jax.tree.map(lambda v: v + 0.01, small)
+    restored = {}
+    for mode in ("off", "on"):
+        with tempfile.TemporaryDirectory() as tmp:
+            sess = CheckpointSession(SessionConfig(
+                root=tmp, codec=CodecPolicy(params="bf16",
+                                            optimizer="delta8",
+                                            device=mode)))
+            sess.dump(DumpRequest(state=small, step=1))
+            r = sess.dump(DumpRequest(state=step2, step=2))
+            restored[mode] = sess.restore(RestoreRequest()).state
+            if mode == "on":
+                assert r.stats.get("leaves_device", 0) > 0, \
+                    "device codec did not take any leaf"
+    for pa, pb in zip(jax.tree.leaves(restored["off"]),
+                      jax.tree.leaves(restored["on"])):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+            "device-mode restore != host-mode restore"
+    emit("ckpt_codec_bit_identity,0,device=on restores == device=off "
+         "restores (hard assert)")
+
+    worst = min(r["speedup"] for r in results.values())
+    emit(f"ckpt_codec_speedup,{worst * 1000:.0f},"
+         f"fused device path {worst:.2f}x host codec (floor across codecs; "
+         f"gate >= 1.5x{'' if strict else ', informational here'})")
+    if record:
+        path = bench_record.update("codec", {
+            "bench": f"ckpt_throughput --codec-compare mb={mb}",
+            "backend": jax.default_backend(),
+            "codecs": results,
+            "min_speedup": worst,
+            "bit_identical_stored": True,
+            "bit_identical_restore": True,
+        })
+        emit(f"ckpt_codec_record,0,{os.path.basename(path)}")
+    if strict:
+        assert worst >= 1.5, \
+            f"fused device codec below the 1.5x gate: {worst:.2f}x"
+    return results
+
+
 def bench_facade(emit, mb=64, saves=4, trials=3, strict_overhead=True,
                  max_overhead=0.05):
     """repro.api service façade vs direct legacy Checkpointer calls.
@@ -289,6 +425,7 @@ def run(emit=print):
     bench_codecs(emit)
     bench_fsync_modes(emit)
     bench_compare(emit)
+    bench_codec_compare(emit, strict=False, record=False)
     bench_facade(emit)
 
 
@@ -296,7 +433,12 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare", action="store_true",
-                    help="serial-vs-pipelined engine comparison only")
+                    help="serial-vs-pipelined engine comparison plus the "
+                         "host-vs-device codec gate")
+    ap.add_argument("--codec-compare", action="store_true",
+                    help="host codec vs fused device encode+digest only "
+                         "(asserts >=1.5x and bit-identical stored bytes / "
+                         "restores; records BENCH json)")
     ap.add_argument("--facade", action="store_true",
                     help="session-façade-vs-direct overhead check only "
                          "(asserts <5%% on the sync dump loop)")
@@ -306,12 +448,20 @@ if __name__ == "__main__":
                          "timing is informational only (shared runners "
                          "cannot promise stable timings)")
     a = ap.parse_args()
-    if a.compare:
+    if a.codec_compare:
+        if a.smoke:
+            bench_codec_compare(print, mb=16, trials=2, strict=False)
+        else:
+            bench_codec_compare(print)
+    elif a.compare:
         if a.smoke:
             bench_compare(print, strict_timing=False, leaves=8,
                           mb_per_leaf=2, trials=2)
+            bench_codec_compare(print, mb=16, trials=2, strict=False,
+                                record=False)
         else:
             bench_compare(print, strict_timing=True)
+            bench_codec_compare(print)
     elif a.facade:
         if a.smoke:
             bench_facade(print, mb=16, saves=2, trials=2,

@@ -1,8 +1,10 @@
 """Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
-Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
-Terms per (arch x shape), single-pod mesh, per-device totals measured from
-unrolled reduced-depth compiles (see launch/dryrun.py measure_totals):
+The hardware model is selectable (``--hw v5e|cpu|custom``) instead of the
+old module-scope TPU v5e constants; ``custom`` takes ``--peak/--hbm/--ici``
+in raw FLOP/s and B/s. Terms per (arch x shape), single-pod mesh,
+per-device totals measured from unrolled reduced-depth compiles (see
+launch/dryrun.py measure_totals):
 
   compute_s    = HLO_FLOPs / peak
   memory_s     = HLO_bytes / HBM_bw
@@ -13,16 +15,49 @@ bound        = dominant term
 roofline_frac= compute_s / max(terms)   (1.0 == compute-bound, the ceiling)
 mfu_ceiling  = MODEL_FLOPS / (max(terms) * peak)  (useful-flop utilization
                upper bound implied by the dominant term)
+
+The ``codec`` term covers the device-side checkpoint codec (this repo's
+dump hot path): the fused encode+digest kernel reads each checkpoint byte
+once and is memory-bound by construction, so its roofline is the memory
+bandwidth and ``codec_roofline_frac = measured_Bps / hbm_bw``. When
+``BENCH_<pr>.json`` carries a ``codec`` section (written by
+``ckpt_throughput.py --codec-compare``) this script reports the fraction
+and annotates the section in place.
+
+    python benchmarks/roofline.py                  # v5e model, dry-run table
+    python benchmarks/roofline.py --hw cpu         # CI runner model
+    python benchmarks/roofline.py --hw custom --peak 1e12 --hbm 5e10
 """
 from __future__ import annotations
 
+import dataclasses
 import glob
 import json
 import os
+import sys
 
-PEAK = 197e12
-HBM = 819e9
-ICI = 50e9
+sys.path.append(os.path.dirname(os.path.abspath(__file__)))
+import bench_record  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class HWModel:
+    """Peak rates the roofline terms divide by. Units: FLOP/s and B/s."""
+    name: str
+    peak_flops: float     # dense-matmul peak (bf16 on TPU, f32 on CPU)
+    hbm_bw: float         # main-memory bandwidth (HBM / DRAM)
+    link_bw: float        # per-link interconnect (ICI / loopback)
+
+
+HW_MODELS = {
+    # TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+    "v5e": HWModel("v5e", 197e12, 819e9, 50e9),
+    # shared CI runner / dev box: a couple of AVX cores and one DDR channel
+    # (deliberately round numbers — the CPU model exists so codec fractions
+    # and bound classification stay meaningful off-accelerator, not to
+    # benchmark the runner)
+    "cpu": HWModel("cpu", 0.2e12, 20e9, 10e9),
+}
 
 ADVICE = {
     "compute": ("compute-bound: reduce non-model flops (remat policy, causal "
@@ -42,17 +77,17 @@ def load_records(out_dir="experiments/dryrun", tag="baseline", pod="pod1"):
     return recs
 
 
-def analyze(rec) -> dict | None:
+def analyze(rec, hw: HWModel = HW_MODELS["v5e"]) -> dict | None:
     tot = rec.get("totals_per_device") or {}
     if "flops" not in tot:
         return None
-    compute_s = tot["flops"] / PEAK
-    memory_s = tot["bytes"] / HBM
+    compute_s = tot["flops"] / hw.peak_flops
+    memory_s = tot["bytes"] / hw.hbm_bw
     # depth extrapolation can go slightly negative for collectives when
     # loop-invariant gathers (CE head) appear in L1 but amortize in L2 —
     # clamp at 0 (true per-layer collective volume is ~0 for those cells)
-    coll_modeled_s = max(0.0, tot["coll_modeled"]) / ICI
-    coll_spec_s = max(0.0, tot["coll_operand"]) / ICI
+    coll_modeled_s = max(0.0, tot["coll_modeled"]) / hw.link_bw
+    coll_spec_s = max(0.0, tot["coll_operand"]) / hw.link_bw
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": coll_modeled_s}
     bound = max(terms, key=terms.get)
@@ -63,17 +98,47 @@ def analyze(rec) -> dict | None:
                        * rec["analytic"]["tokens"] / n_dev)
     return {
         "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "hw": hw.name,
         "compute_s": compute_s, "memory_s": memory_s,
         "collective_s": coll_modeled_s, "collective_spec_s": coll_spec_s,
         "bound": bound, "roofline_frac": compute_s / lb if lb else 0.0,
         "model_flops_ratio": model_flops_dev / tot["flops"]
         if tot["flops"] else 0.0,
-        "mfu_ceiling": model_flops_dev / (lb * PEAK) if lb else 0.0,
+        "mfu_ceiling": model_flops_dev / (lb * hw.peak_flops) if lb else 0.0,
         "temp_gb": rec["memory_analysis_per_device"].get(
             "temp_size_in_bytes", 0) / 1e9,
         "options": rec["options"],
         "advice": ADVICE[bound],
     }
+
+
+def codec_fraction(bytes_per_s: float, hw: HWModel) -> float:
+    """The codec term: a single-pass streaming kernel's ceiling is the
+    memory bandwidth, so its roofline fraction is Bps / hbm_bw."""
+    return bytes_per_s / hw.hbm_bw
+
+
+def codec_term(emit, hw: HWModel) -> dict | None:
+    """Report the device-codec roofline fraction from the BENCH_<pr>.json
+    ``codec`` section (if ckpt_throughput --codec-compare has recorded one)
+    and annotate the section with the fraction + hardware model."""
+    doc = bench_record.read()
+    sec = doc.get("sections", {}).get("codec")
+    if not sec:
+        emit("roofline_codec,0,no codec section in "
+             f"{os.path.basename(bench_record.bench_path())} — run "
+             "benchmarks/ckpt_throughput.py --codec-compare first")
+        return None
+    best = max(v["device_Bps"] for v in sec["codecs"].values())
+    frac = codec_fraction(best, hw)
+    sec["roofline"] = {"hw": hw.name, "hbm_bw": hw.hbm_bw,
+                       "codec_roofline_frac": frac}
+    bench_record.update("codec", sec)
+    emit(f"roofline_codec,{1e6 * (1 / max(frac, 1e-12)):.0f},"
+         f"device codec {best / 1e9:.2f} GB/s = "
+         f"{frac * 100:.1f}% of {hw.name} memory roofline "
+         f"({hw.hbm_bw / 1e9:.0f} GB/s)")
+    return sec["roofline"]
 
 
 def markdown(rows) -> str:
@@ -89,10 +154,11 @@ def markdown(rows) -> str:
     return "\n".join(out)
 
 
-def run(emit=print, out_dir="experiments/dryrun", tag="baseline"):
+def run(emit=print, out_dir="experiments/dryrun", tag="baseline",
+        hw: HWModel = HW_MODELS["v5e"]):
     rows = []
     for rec in load_records(out_dir, tag):
-        r = analyze(rec)
+        r = analyze(rec, hw)
         if r is None:
             continue
         rows.append(r)
@@ -108,10 +174,37 @@ def run(emit=print, out_dir="experiments/dryrun", tag="baseline"):
     else:
         emit("roofline_table,0,no dry-run records found — run "
              "scripts/run_dryrun_sweep.sh first")
+    codec_term(emit, hw)
     return rows
 
 
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hw", default="v5e",
+                    choices=sorted(HW_MODELS) + ["custom"],
+                    help="hardware model the terms divide by")
+    ap.add_argument("--peak", type=float, default=0.0,
+                    help="custom peak FLOP/s (with --hw custom)")
+    ap.add_argument("--hbm", type=float, default=0.0,
+                    help="custom memory bandwidth B/s (with --hw custom)")
+    ap.add_argument("--ici", type=float, default=0.0,
+                    help="custom per-link interconnect B/s (with --hw custom)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    a = ap.parse_args(argv)
+    if a.hw == "custom":
+        if not (a.peak and a.hbm):
+            ap.error("--hw custom needs --peak and --hbm (and usually --ici)")
+        hw = HWModel("custom", a.peak, a.hbm, a.ici or a.hbm)
+    else:
+        hw = HW_MODELS[a.hw]
+    rows = run(hw=hw, out_dir=a.out_dir, tag=a.tag)
+    if rows:
+        print()
+        print(markdown(rows))
+    return 0
+
+
 if __name__ == "__main__":
-    rows = run()
-    print()
-    print(markdown(rows))
+    raise SystemExit(main())

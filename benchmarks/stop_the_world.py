@@ -27,6 +27,8 @@ runners), emitting a markdown summary line for the step summary.
 """
 from __future__ import annotations
 
+import os
+import sys
 import tempfile
 import time
 
@@ -36,6 +38,9 @@ import numpy as np
 
 from repro.api import (CheckpointSession, RetentionPolicy, SessionConfig)
 from repro.core.storage import LocalDirTier
+
+sys.path.append(os.path.dirname(os.path.abspath(__file__)))
+import bench_record  # noqa: E402
 
 
 def synth_state(leaves=24, mb_per_leaf=4, seed=0):
@@ -177,8 +182,16 @@ def main(argv=None) -> int:
                   rounds_list=tuple(int(x) for x in a.rounds.split(","))
                   if a.rounds else (1, 2, 4))
     res = bench(print, dirty_leaves=a.dirty_leaves, **kw)
+    best = max(res, key=lambda r: r["reduction"])
+    path = bench_record.update("stop_the_world", {
+        "bench": "stop_the_world" + (" --smoke" if a.smoke else ""),
+        "monolithic_freeze_s": best["monolithic_s"],
+        "predump_freeze_s": best["freeze_s"],
+        "predump_rounds": best["rounds"],
+        "freeze_reduction": best["reduction"],
+    })
+    print(f"stw_record,0,{os.path.basename(path)}")
     if a.smoke:
-        best = max(res, key=lambda r: r["reduction"])
         print(f"\n### stop-the-world: {best['monolithic_s'] * 1e3:.0f}ms "
               f"monolithic -> {best['freeze_s'] * 1e3:.0f}ms with "
               f"{best['rounds']} pre-dump round(s) "

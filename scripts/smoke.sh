@@ -11,6 +11,8 @@ exec python -m pytest -q \
     tests/test_checkpoint_properties.py \
     tests/test_api_session.py \
     tests/test_predump_lazy.py \
+    tests/test_device_codec.py \
+    tests/test_cdc.py \
     tests/test_remote_tier.py \
     tests/test_remote_properties.py \
     "$@"

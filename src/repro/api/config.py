@@ -22,6 +22,8 @@ import signal as _signal
 from typing import Any, Callable
 
 CODEC_NAMES = ("none", "bf16", "delta8")
+DEVICE_CODEC_MODES = ("off", "auto", "on")
+CHUNKING_MODES = ("fixed", "cdc")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,22 +50,39 @@ class CodecPolicy:
     path->codec callable that overrides both. ``incremental`` links parent
     images (chunk dedup + delta8 chains).
 
+    ``device`` routes codec-applied fp32 leaves through the fused
+    device-side encode+digest kernels ("off" default; "auto" enables on
+    accelerator backends only; "on" forces the fused path — XLA-on-CPU
+    without an accelerator). Restores are bit-identical either way; a
+    device failure falls back to the host codec per leaf. ``chunking``
+    picks the chunker: "fixed" windows, or "cdc" content-defined
+    boundaries that keep dedup alive across leaf reshaping.
+
     Example::
 
         CodecPolicy(optimizer="delta8")        # params lossless, moments
         #                                        int8-delta vs parent image
         CodecPolicy(custom=lambda p: "bf16" if "/v/" in p else "none")
+        CodecPolicy(optimizer="delta8", device="auto", chunking="cdc")
     """
     params: str = "none"
     optimizer: str = "none"
     incremental: bool = True
     custom: Callable[[str], str] | None = None
+    device: str = "off"
+    chunking: str = "fixed"
 
     def __post_init__(self):
         for which in (self.params, self.optimizer):
             if which not in CODEC_NAMES:
                 raise ValueError(f"unknown codec {which!r}; "
                                  f"choose from {CODEC_NAMES}")
+        if self.device not in DEVICE_CODEC_MODES:
+            raise ValueError(f"unknown device codec mode {self.device!r}; "
+                             f"choose from {DEVICE_CODEC_MODES}")
+        if self.chunking not in CHUNKING_MODES:
+            raise ValueError(f"unknown chunking mode {self.chunking!r}; "
+                             f"choose from {CHUNKING_MODES}")
 
     def to_leaf_policy(self) -> Callable[[str], str] | None:
         """Compile to the engine's path->codec callable (None == all-raw,

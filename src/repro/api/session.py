@@ -296,7 +296,9 @@ class CheckpointSession:
                 baseline_image=self._prev_image)
         kw = dict(step=step, meta=meta or {}, parent=parent,
                   codec_policy=self.codec_policy,
-                  prev_host_tree=prev_host, topology=topology or {})
+                  prev_host_tree=prev_host, topology=topology or {},
+                  chunking_mode=self.config.codec.chunking,
+                  device_codec=self.config.codec.device)
         if self.chunk_bytes:
             kw["chunk_bytes"] = self.chunk_bytes
         return kw
@@ -339,6 +341,7 @@ class CheckpointSession:
         reuse, digests = self._classify(host)
         out = _dump(host, self.tier, replicas=self.replicas,
                     executor=self.executor, reuse_records=reuse,
+                    device_source=tree,   # device-resident when caller's is
                     **self._save_kw(step, meta, topology))
         if self.codec_policy is not None and self.incremental:
             self._prev_host = host_tree_by_path(host)
@@ -388,6 +391,8 @@ class CheckpointSession:
             #                           may decode through
         kw = dict(step=step, parent=parent, topology=topology or {},
                   codec_policy=self.codec_policy, prev_host_tree=None,
+                  chunking_mode=self.config.codec.chunking,
+                  device_codec=self.config.codec.device,
                   meta={**(meta or {}),
                         PRE_DUMP_META_KEY: {
                             "round": rnd,
@@ -397,7 +402,7 @@ class CheckpointSession:
             kw["chunk_bytes"] = self.chunk_bytes
         out = _dump(host, self.tier, replicas=self.replicas,
                     executor=self.executor, image_id=image_id,
-                    reuse_records=reuse, **kw)
+                    reuse_records=reuse, device_source=tree, **kw)
         self._tracker.update(digests, out["records"], out["image_id"],
                              pre_dump=True)
         if self.codec_policy is not None and self.incremental:

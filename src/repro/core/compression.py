@@ -14,6 +14,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.kernels.ckpt_codec import ops
 from repro.kernels.ckpt_codec.ops import delta_encode, delta_decode
 
 CODEC_BLOCK = 16384
@@ -60,6 +61,18 @@ def decode_leaf(stored: np.ndarray, codec: str, codec_meta: dict,
                 prev: np.ndarray | None = None) -> np.ndarray:
     if codec == "none" or not codec_meta.get("applied", False):
         return stored
+    if "digest" in codec_meta:
+        # device-encoded leaves carry the fused kernels' payload digest:
+        # recompute it from the stored bytes before decoding, so a bad
+        # device->host transfer or a silently corrupted chunk trips here
+        # (on top of — not instead of — SHA-256 chunk verification)
+        from repro.core.integrity import CorruptionError
+        got = ops.payload_digest(np.asarray(stored), codec, codec_meta)
+        if got != codec_meta["digest"]:
+            raise CorruptionError(
+                codec_meta.get("image_id", "?"),
+                [f"payload digest mismatch: {got} != "
+                 f"{codec_meta['digest']}"])
     if codec == "bf16":
         return np.asarray(jnp.asarray(stored).astype(jnp.float32))
     if codec == "delta8":

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.core import chunking, manifest
+from repro.core import device_codec as device_codec_mod
 from repro.core.executor import CheckpointExecutor, get_default_executor
 from repro.core.plan import plan_dump
 from repro.core.storage import Tier, as_tier
@@ -41,15 +42,22 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
          meta: dict | None = None, parent: str | None = None,
          codec_policy=None, prev_host_tree: dict | None = None,
          replicas=(), topology: dict | None = None,
-         chunk_bytes: int = chunking.CHUNK_BYTES,
+         chunk_bytes: int = chunking.CHUNK_BYTES, chunking_mode: str = "fixed",
          process_index: int = 0, num_processes: int = 1,
          executor: CheckpointExecutor | None = None,
-         reuse_records: dict | None = None) -> dict:
+         reuse_records: dict | None = None,
+         device_codec: str = "off", device_source=None) -> dict:
     """Returns {"image_id", "stats", "records"}. ``prev_host_tree``
     (path->np array) enables delta8; ``parent`` links the incremental
     chain; ``reuse_records`` re-emits cached records for digest-proven
     unchanged leaves (the pre-dump residual path — see core/predump.py).
-    ``executor`` defaults to the process-wide pipelined engine."""
+    ``executor`` defaults to the process-wide pipelined engine.
+    ``chunking_mode``: "fixed" windows or "cdc" rolling-hash boundaries.
+    ``device_codec`` ("off"/"auto"/"on") routes codec-applied fp32 leaves
+    through the fused device encode+digest stage (core/device_codec.py),
+    double-buffered against the host chunk writes; ``device_source`` is
+    the original (possibly device-resident) tree so encode reads HBM
+    directly — defaults to ``tree``."""
     tier = as_tier(root)
     replicas = [as_tier(r) for r in replicas]
     ex = executor or get_default_executor()
@@ -59,9 +67,17 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
     plan = plan_dump(leaves, step=step, image_id=image_id, parent=parent,
                      codec_policy=codec_policy,
                      prev_host_tree=prev_host_tree, chunk_bytes=chunk_bytes,
+                     chunking=chunking_mode,
                      process_index=process_index,
                      num_processes=num_processes,
                      reuse_records=reuse_records)
+
+    encoded = None
+    if device_codec_mod.resolve_mode(device_codec):
+        src = dict(flatten_with_paths(
+            device_source if device_source is not None else host))
+        encoded = device_codec_mod.encode_leaves(
+            plan, src, prev_host_tree, ex)
 
     arrays = {p: np.asarray(a) for p, a in leaves}
     # the writer guard spans probe->write->commit: a concurrent gc on the
@@ -70,7 +86,7 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
     # has written but not yet referenced from a committed manifest
     with tier.writer():
         out = ex.run_dump(plan, arrays, tier, replicas,
-                          prev_host_tree=prev_host_tree)
+                          prev_host_tree=prev_host_tree, encoded=encoded)
 
         man = manifest.build(plan.image_id, step=step, leaves=out["records"],
                              meta=meta or {}, parent=parent,

@@ -63,16 +63,24 @@ class CheckpointExecutor:
 
     # ------------------------------------------------------------------ dump
     def run_dump(self, plan, arrays: dict, tier, replicas=(),
-                 prev_host_tree: dict | None = None) -> dict:
+                 prev_host_tree: dict | None = None,
+                 encoded: dict | None = None) -> dict:
         """Execute a DumpPlan. arrays: {path: host np.ndarray}. Returns
-        {"records": [manifest leaf records in plan order], "stats": {...}}."""
+        {"records": [manifest leaf records in plan order], "stats": {...}}.
+
+        ``encoded``: {path: Future -> (stored, codec_meta)} from the device
+        codec stage (core/device_codec.py) — those leaves skip the host
+        encode and consume the landed device result instead; the device
+        transfer of leaf i+1 overlaps this leaf's chunk writes."""
         if self.use_chunk_index:
             tier.enable_chunk_index()
             for r in replicas:
                 r.enable_chunk_index()
         stats = {"bytes_raw": 0, "bytes_stored": 0, "bytes_deduped": 0,
                  "chunks": 0, "chunks_deduped": 0,
-                 "leaves_reused": 0, "bytes_reused": 0}
+                 "leaves_reused": 0, "bytes_reused": 0,
+                 "leaves_device": 0}
+        encoded = encoded or {}
         stats_lock = threading.Lock()
         claimed: set = set()        # intra-dump first-writer-wins
         claim_lock = threading.Lock()
@@ -113,17 +121,34 @@ class CheckpointExecutor:
                 rec = reuse_leaf(lp)
                 if rec is not None:
                     return rec
-            arr = np.asarray(arrays[lp.path])
-            prev = prev_host_tree.get(lp.path) if lp.use_prev else None
-            stored, codec_meta = encode_leaf(arr, lp.codec, prev)
+            fut = encoded.get(lp.path)
+            if fut is not None:
+                # device stage: block on this leaf's landed result (the
+                # stage keeps the NEXT leaf's encode + transfer in flight
+                # while we chunk/write this one); any device failure was
+                # already degraded to a host encode inside the stage
+                stored, codec_meta = fut.result()
+                raw_nbytes, orig_dtype, orig_shape = (
+                    lp.nbytes, lp.dtype, list(lp.shape))
+                with stats_lock:
+                    stats["leaves_device"] += 1
+            else:
+                arr = np.asarray(arrays[lp.path])
+                prev = prev_host_tree.get(lp.path) if lp.use_prev else None
+                stored, codec_meta = encode_leaf(arr, lp.codec, prev)
+                raw_nbytes, orig_dtype, orig_shape = (
+                    arr.nbytes, str(arr.dtype), list(arr.shape))
             data = chunking.leaf_to_bytes(np.asarray(stored))
-            views = chunking.chunk_views(data, plan.chunk_bytes)
+            views = chunking.chunk_stream(data, plan.chunk_bytes,
+                                          plan.chunking)
             rec = chunking.leaf_record(
                 lp.path, np.asarray(stored), plan.chunk_bytes,
                 codec=lp.codec, codec_meta=codec_meta,
-                chunk_hashes=[h for h, _ in views], nbytes=len(data))
-            rec["orig_dtype"] = str(arr.dtype)
-            rec["orig_shape"] = list(arr.shape)
+                chunk_hashes=[h for h, _ in views], nbytes=len(data),
+                chunking=plan.chunking,
+                chunk_sizes=[len(v) for _, v in views])
+            rec["orig_dtype"] = orig_dtype
+            rec["orig_shape"] = orig_shape
 
             present = tier.has_chunks({h for h, _ in views})
             to_write, deduped_bytes = [], 0
@@ -154,7 +179,7 @@ class CheckpointExecutor:
                     f.result()   # propagate the first write error
 
             with stats_lock:
-                stats["bytes_raw"] += arr.nbytes
+                stats["bytes_raw"] += raw_nbytes
                 stats["chunks"] += len(views)
                 stats["chunks_deduped"] += len(views) - len(to_write)
                 stats["bytes_deduped"] += deduped_bytes

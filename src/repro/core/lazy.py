@@ -30,6 +30,7 @@ from collections.abc import Mapping
 
 import numpy as np
 
+from repro.core.chunking import chunk_offsets
 from repro.core.executor import CheckpointExecutor, get_default_executor
 from repro.core.plan import plan_restore
 from repro.core.restore import latest_image_id
@@ -128,11 +129,10 @@ class LeafServer:
         end = total if length is None else min(total, offset + length)
         if offset >= end:
             return b""
-        cb = int(rec["chunk_bytes"])
         out = []
-        for i, h in enumerate(rec["chunks"]):
-            c0 = i * cb
-            c1 = min(c0 + cb, total)
+        # chunk_offsets handles both geometries: the fixed chunk_bytes
+        # grid and cdc records' explicit per-chunk sizes
+        for h, (c0, c1) in zip(rec["chunks"], chunk_offsets(rec)):
             if c1 <= offset:
                 continue
             if c0 >= end:

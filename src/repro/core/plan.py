@@ -46,6 +46,8 @@ class DumpPlan:
     num_processes: int
     leaves: tuple          # tuple[LeafPlan] — only this process's partition
     all_paths: tuple       # every leaf path across processes (round-robin order)
+    chunking: str = "fixed"   # chunker: "fixed" windows or "cdc"
+    #                           rolling-hash boundaries (chunk_bytes = avg)
 
     @property
     def num_leaves(self) -> int:
@@ -93,7 +95,7 @@ class RestorePlan:
 def plan_dump(leaves, *, step: int, image_id: str | None = None,
               parent: str | None = None, codec_policy=None,
               prev_host_tree: dict | None = None,
-              chunk_bytes: int = CHUNK_BYTES,
+              chunk_bytes: int = CHUNK_BYTES, chunking: str = "fixed",
               process_index: int = 0, num_processes: int = 1,
               reuse_records: dict | None = None) -> DumpPlan:
     """leaves: [(path, array-or-ShapeDtypeStruct)]. Pure: no tier access,
@@ -138,7 +140,8 @@ def plan_dump(leaves, *, step: int, image_id: str | None = None,
         image_id=image_id or f"step_{int(step):010d}", step=int(step),
         parent=parent, chunk_bytes=int(chunk_bytes),
         process_index=process_index, num_processes=num_processes,
-        leaves=tuple(plans), all_paths=tuple(all_paths))
+        leaves=tuple(plans), all_paths=tuple(all_paths),
+        chunking=str(chunking))
 
 
 def plan_restore(tier, image_id: str) -> RestorePlan:

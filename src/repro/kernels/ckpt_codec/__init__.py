@@ -1,2 +1,4 @@
 from repro.kernels.ckpt_codec.ops import (  # noqa: F401
-    delta_encode, delta_decode)
+    DIGEST_ALG, bf16_encode_digest, delta_decode, delta_encode,
+    delta_encode_digest, digest_blocks, digest_weights, fold_digest,
+    payload_digest)

@@ -1,12 +1,58 @@
-"""Pure-jnp oracle for the checkpoint delta codec.
+"""Pure-jnp oracle for the checkpoint delta codec + per-block digest.
 
 Blockwise delta-int8 with per-block scales and exact dirty flags — CRIU's
 pre-dump dirty-page tracking adapted to the TPU memory hierarchy (the unit of
 incrementality is a VMEM-sized block, not a 4 KiB kernel page).
+
+The digest is a pair of uint32 polynomial multiply-accumulate lanes over the
+*encoded* payload bytes of each block (weights = powers of two distinct odd
+multipliers, passed in as a constant so numpy / jnp / Pallas agree bit for
+bit in wraparound arithmetic). It is an integrity tripwire for the device
+encode path and the pre-dump dirty classifier — it does NOT replace the
+SHA-256 content addressing of chunks.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+
+def _digest_lanes(units, weights):
+    """units: [nblk, blk] uint32 payload units; weights: [2, blk] uint32.
+    -> (h1, h2) each [nblk] uint32 — per-block mult-acc in wraparound
+    uint32 (identical in numpy, jnp and Pallas)."""
+    u = units.astype(jnp.uint32)
+    h1 = jnp.sum(u * weights[0][None, :], axis=1, dtype=jnp.uint32)
+    h2 = jnp.sum(u * weights[1][None, :], axis=1, dtype=jnp.uint32)
+    return h1, h2
+
+
+def delta_encode_digest_ref(x, prev, weights):
+    """Fused oracle: delta_encode_ref + per-block digest of the encoded
+    int8 payload (the byte values of q, two's complement). Returns
+    (q, scale, dirty, h1, h2)."""
+    q, scale, dirty = delta_encode_ref(x, prev)
+    units = (q.astype(jnp.int32) & 0xFF).astype(jnp.uint32)
+    h1, h2 = _digest_lanes(units, weights)
+    return q, scale, dirty, h1, h2
+
+
+def bf16_encode_digest_ref(x, weights):
+    """Fused oracle: fp32 -> bf16 cast + per-block digest of the bf16 bit
+    patterns. Returns (y bf16 [nblk, blk], h1, h2)."""
+    y = x.astype(jnp.bfloat16)
+    units = jax.lax.bitcast_convert_type(y, jnp.uint16).astype(jnp.uint32)
+    h1, h2 = _digest_lanes(units, weights)
+    return y, h1, h2
+
+
+def digest_blocks_ref(x, weights):
+    """Digest-only oracle over raw fp32 blocks (bit patterns as uint32).
+    Returns (h1, h2)."""
+    units = jax.lax.bitcast_convert_type(
+        x.astype(jnp.float32), jnp.uint32)
+    h1, h2 = _digest_lanes(units, weights)
+    return h1, h2
 
 
 def delta_encode_ref(x, prev):

@@ -26,7 +26,8 @@ EXPECTED_FIELDS = {
                       "async_dumps", "preemption", "migration",
                       "chunk_bytes", "serial", "executor"],
     "RetentionPolicy": ["keep_last", "keep_every"],
-    "CodecPolicy": ["params", "optimizer", "incremental", "custom"],
+    "CodecPolicy": ["params", "optimizer", "incremental", "custom",
+                    "device", "chunking"],
     "AsyncPolicy": ["enabled", "max_pending"],
     "PreemptionPolicy": ["install_signals", "signals", "exit_code"],
     "MigrationPolicy": ["arch", "topology", "mesh", "monitor", "restart",
@@ -116,11 +117,13 @@ def test_session_constructor_takes_config_and_overrides():
 def test_table1_covers_paper_rows_plus_precopy_extensions():
     # rows 1-10 are the paper's Table 1; 11-12 extend it with CRIU's
     # pre-copy / post-copy mechanisms (pre-dump, lazy-pages); 13 with the
-    # migration path's practical bottleneck — remote image transfer
-    assert sorted(api.TABLE1) == list(range(1, 14))
+    # migration path's practical bottleneck — remote image transfer; 14
+    # with the dump path's hot loop — device-side fused encode+digest
+    assert sorted(api.TABLE1) == list(range(1, 15))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
     assert api.TABLE1[11][2] == "pre_dump"
     assert api.TABLE1[12][2] == "lazy_restore"
     assert api.TABLE1[13][2] == "remote_storage"
+    assert api.TABLE1[14][2] == "device_codec"

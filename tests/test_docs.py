@@ -118,7 +118,12 @@ def test_docs_mention_the_new_knobs():
                  # remote tier surface (ISSUE 5): URI schemes, retry
                  # knobs, the typed failure, and the lazy-cold guidance
                  "remote://", "cache+remote://", "TransferError",
-                 "attempts", "backoff_ms", "part_kb", "fail_rate"):
+                 "attempts", "backoff_ms", "part_kb", "fail_rate",
+                 # device codec + chunking surface (ISSUE 6): the
+                 # CodecPolicy knobs, the digest algorithm, the
+                 # fallback semantics, and the chunker choice
+                 'device="auto"', 'chunking="cdc"', "pmac32x2-v1",
+                 "host codec", "fallback", "DEVICE_MIN_BYTES"):
         assert knob in guide, f"operator guide lost mention of {knob!r}"
     readme = (ROOT / "README.md").read_text()
     assert 'mode="pre_dump"' in readme and "lazy=True" in readme
