@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: check test lint api-check docs-check cov-remote bench-compare \
 	bench-smoke bench-facade bench-migration bench-stw bench-remote \
-	bench-codec run-example
+	bench-codec bench-fleet run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -70,6 +70,12 @@ bench-stw:
 # (bit-identical restores hard-asserted in every mode)
 bench-remote:
 	python benchmarks/remote_transfer.py
+
+# fleet preemption wave: staggered dumps <= naive under a constrained
+# store (budget provably held), placement-aware restore hit rate >
+# random (bit-identical restores hard-asserted); records BENCH_<pr>.json
+bench-fleet:
+	python benchmarks/fleet_wave.py
 
 # run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
 run-example:

@@ -15,4 +15,5 @@ exec python -m pytest -q \
     tests/test_cdc.py \
     tests/test_remote_tier.py \
     tests/test_remote_properties.py \
+    tests/test_fleet.py \
     "$@"

@@ -34,13 +34,21 @@ storage tiers, typed request/response pairs, and an environment probe:
 
     capabilities()            # `criu check`: what does THIS env support?
 
+Every request, receipt and policy above is also a WIRE MESSAGE: it
+round-trips through ``to_wire()``/``from_wire(dict)`` under the
+versioned schema ``WIRE_SCHEMA_VERSION`` ("<major>.<minor>"; a future
+major is rejected with ``WireVersionError``, unknown fields within a
+major are ignored, and runtime-only fields — live pytrees, iterators,
+executors — are refused with ``WireCodingError``). That contract is
+what the fleet coordinator (repro.fleet) speaks to its jobs.
+
 Everything here is stable, versioned surface (tests/test_api_surface.py
-snapshots names and signatures; ``API_VERSION`` is bumped on any
-non-additive change). ``TABLE1`` is the paper's Table-1 row registry —
-the single source the capability probes, the reproduction benchmark and
-docs/capabilities.md all derive from. The legacy facades in repro.core
-(Checkpointer, AsyncCheckpointer) are deprecation shims over a session;
-DESIGN.md §7 maps old names to new."""
+snapshots names, signatures and the wire schema; ``API_VERSION`` is
+bumped on any non-additive change). ``TABLE1`` is the paper's Table-1
+row registry — the single source the capability probes, the
+reproduction benchmark and docs/capabilities.md all derive from. The
+legacy facades in repro.core (Checkpointer, AsyncCheckpointer) are
+deprecation shims over a session; DESIGN.md §7 maps old names to new."""
 from __future__ import annotations
 
 from repro.api.capabilities import (TABLE1, Capability, CapabilityReport,
@@ -52,6 +60,8 @@ from repro.api.requests import (DumpReceipt, DumpRequest, MigrateRequest,
                                 MigrationTicket, RestoreRequest,
                                 RestoreResult)
 from repro.api.session import CheckpointSession
+from repro.api.wire import SCHEMA_VERSION as WIRE_SCHEMA_VERSION
+from repro.api.wire import WireCodingError, WireVersionError
 
 API_VERSION = 1
 
@@ -66,6 +76,8 @@ __all__ = [
     "DumpRequest", "DumpReceipt",
     "RestoreRequest", "RestoreResult",
     "MigrateRequest", "MigrationTicket",
+    # wire contract (to_wire/from_wire on every type above)
+    "WIRE_SCHEMA_VERSION", "WireVersionError", "WireCodingError",
     # capability probing (`criu check`)
     "capabilities", "Capability", "CapabilityReport", "TABLE1",
 ]

@@ -14,12 +14,22 @@ object here, so callers compose exactly the concerns they care about:
 Tiers are URI-addressed (file://, mem://, remote://, cache+remote://, or
 a plain path — see core.storage.as_tier and core.remote.tier_from_uri);
 replica entries may also be pre-built Tier objects. All policies are
-frozen: a session's behavior is fixed at open time."""
+frozen: a session's behavior is fixed at open time.
+
+SessionConfig and every policy are also WIRE MESSAGES (repro.api.wire):
+``to_wire()``/``from_wire(dict)`` round-trip them loss-free with an
+explicit ``schema_version``, so a fleet coordinator can ship a job its
+full session description as data. Runtime-only fields (a pre-built Tier
+object, a shared executor, a custom codec callable, a live monitor) are
+refused on the wire — use URI tier references and let the job side build
+its own runtime objects."""
 from __future__ import annotations
 
 import dataclasses
 import signal as _signal
 from typing import Any, Callable
+
+from repro.api.wire import WireCodingError, WireRecord
 
 CODEC_NAMES = ("none", "bf16", "delta8")
 DEVICE_CODEC_MODES = ("off", "auto", "on")
@@ -27,7 +37,7 @@ CHUNKING_MODES = ("fixed", "cdc")
 
 
 @dataclasses.dataclass(frozen=True)
-class RetentionPolicy:
+class RetentionPolicy(WireRecord):
     """Which images survive: the newest ``keep_last`` plus every step
     multiple of ``keep_every`` (0 disables); delta-chain parents of kept
     images are always pinned, and an in-progress pre-dump chain is never
@@ -43,7 +53,7 @@ class RetentionPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
-class CodecPolicy:
+class CodecPolicy(WireRecord):
     """Per-leaf codec selection. ``params``/``optimizer`` name a codec for
     the two halves of a train state (params stay lossless by default;
     optimizer moments may opt into delta8/bf16); ``custom`` is an explicit
@@ -71,6 +81,9 @@ class CodecPolicy:
     custom: Callable[[str], str] | None = None
     device: str = "off"
     chunking: str = "fixed"
+
+    # a callable cannot travel; wire configs use params/optimizer names
+    _WIRE_OPAQUE = ("custom",)
 
     def __post_init__(self):
         for which in (self.params, self.optimizer):
@@ -106,7 +119,7 @@ class CodecPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
-class AsyncPolicy:
+class AsyncPolicy(WireRecord):
     """Async dump lane: DumpRequest(mode="async") capture-and-go semantics.
     ``max_pending`` bounds how many captured host trees may be alive at
     once (memory backpressure).
@@ -121,7 +134,7 @@ class AsyncPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
-class PreemptionPolicy:
+class PreemptionPolicy(WireRecord):
     """Scheduler-preemption handling: when ``install_signals`` the session
     (as a context manager) installs handlers that flag — never dump — on
     the listed signals; the training loop polls should_migrate() at step
@@ -137,9 +150,25 @@ class PreemptionPolicy:
     signals: tuple = (_signal.SIGTERM, _signal.SIGUSR2)
     exit_code: int = 85
 
+    _WIRE_TUPLES = ("signals",)
+
+    @classmethod
+    def _wire_decode_field(cls, name: str, value):
+        v = super()._wire_decode_field(name, value)
+        if name == "signals":
+            # signal numbers decode back to Signals members where the
+            # platform knows them (loss-free either way: IntEnum == int)
+            def sig(n):
+                try:
+                    return _signal.Signals(n)
+                except ValueError:
+                    return n
+            v = tuple(sig(n) for n in v)
+        return v
+
 
 @dataclasses.dataclass(frozen=True)
-class MigrationPolicy:
+class MigrationPolicy(WireRecord):
     """Dump-side migration context: what the migration record says about
     this job (arch, topology) and which fleet policies feed it. ``monitor``
     (a training.fault_tolerance.StragglerMonitor) makes observe_step()
@@ -165,9 +194,12 @@ class MigrationPolicy:
     verify_digest: bool = True
     predump_rounds: int = 0
 
+    # live fleet-policy objects stay with the job that owns them
+    _WIRE_OPAQUE = ("mesh", "monitor", "restart")
+
 
 @dataclasses.dataclass(frozen=True)
-class SessionConfig:
+class SessionConfig(WireRecord):
     """Everything a CheckpointSession needs, in one typed object.
 
     root/replicas: URI-addressed tiers (file://, mem://, remote://,
@@ -199,8 +231,26 @@ class SessionConfig:
     serial: bool = False
     executor: Any = None
 
+    # a shared executor is process-local; the receiving job builds its own
+    _WIRE_OPAQUE = ("executor",)
+    _WIRE_TUPLES = ("replicas",)
+
     def __post_init__(self):
         if isinstance(self.replicas, (str, bytes)):
             raise TypeError("SessionConfig.replicas must be a sequence of "
                             "tier references, not a single string")
         object.__setattr__(self, "replicas", tuple(self.replicas))
+
+    def _wire_encode_field(self, name: str, value):
+        if name in ("root", "replicas"):
+            refs = [value] if name == "root" else list(value)
+            for r in refs:
+                if not isinstance(r, (str, bytes)) \
+                        and not hasattr(r, "__fspath__"):
+                    raise WireCodingError(
+                        f"SessionConfig.{name} holds a pre-built "
+                        f"{type(r).__name__} tier object — wire configs "
+                        f"must use URI tier references (file://, mem://, "
+                        f"remote://, cache+remote://) so the receiving "
+                        f"job can resolve its own tier")
+        return super()._wire_encode_field(name, value)

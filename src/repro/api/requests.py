@@ -8,17 +8,24 @@ in and a frozen receipt/result/ticket object out.
 
 Requests carry only caller intent; everything environment-shaped (tiers,
 policies, executor) lives in the SessionConfig the session was opened with.
-The objects are plain dataclasses so they serialize naturally (asdict) for
-logging / an eventual wire protocol."""
+
+Every request/receipt here is also a WIRE MESSAGE (repro.api.wire): it
+round-trips through ``to_wire()``/``from_wire(dict)`` with an explicit
+``schema_version``, rejecting future-major peers and tolerating unknown
+fields within a major. Runtime-only fields (the live ``state`` pytree, an
+open ``iterator``) never travel — a fleet coordinator sends the request
+with those unset and the job-side FleetClient supplies them."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
 
+from repro.api.wire import WireRecord
+
 
 # ------------------------------------------------------------------- dump
 @dataclasses.dataclass(frozen=True)
-class DumpRequest:
+class DumpRequest(WireRecord):
     """Dump ``state`` (a device/host pytree) as the image for ``step``.
 
     mode: "sync" blocks until the image is durable; "async" captures the
@@ -41,6 +48,10 @@ class DumpRequest:
     topology: dict | None = None
     mode: str = "sync"                    # "sync" | "async" | "pre_dump"
 
+    # the live pytree never travels: a coordinator sends state=None and
+    # the job-side FleetClient substitutes its own device state
+    _WIRE_OPAQUE = ("state",)
+
     def __post_init__(self):
         if self.mode not in ("sync", "async", "pre_dump"):
             raise ValueError(f"DumpRequest.mode must be 'sync', 'async' or "
@@ -48,7 +59,7 @@ class DumpRequest:
 
 
 @dataclasses.dataclass(frozen=True)
-class DumpReceipt:
+class DumpReceipt(WireRecord):
     """Proof of a dump. ``committed`` is False for an async request that has
     been captured+enqueued but not yet waited on (image_id/stats arrive with
     the receipts returned by CheckpointSession.wait()).
@@ -70,7 +81,7 @@ class DumpReceipt:
 
 # ---------------------------------------------------------------- restore
 @dataclasses.dataclass(frozen=True)
-class RestoreRequest:
+class RestoreRequest(WireRecord):
     """Restore an image (latest by default) — possibly onto a different
     topology than it was dumped from.
 
@@ -109,6 +120,11 @@ class RestoreRequest:
     allow_env_mismatch: bool = True
     lazy: bool = False
     prefetch_order: tuple | None = None
+
+    # device-shaped runtime objects stay with the job; the restoring
+    # FleetClient supplies its own struct/shardings/mesh
+    _WIRE_OPAQUE = ("target_struct", "shardings", "mesh")
+    _WIRE_TUPLES = ("prefetch_order",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +170,7 @@ class RestoreResult:
 
 # ---------------------------------------------------------------- migrate
 @dataclasses.dataclass(frozen=True)
-class MigrateRequest:
+class MigrateRequest(WireRecord):
     """Turn "this job must go away" into a durable, restorable image.
 
     state: the device pytree to dump. iterator: the live data iterator
@@ -176,9 +192,13 @@ class MigrateRequest:
     opt_cfg: Any = None
     reason: str | None = None
 
+    # live job objects (pytree, open iterator, PRNG key, optimizer cfg)
+    # never travel; the FleetClient fills them at execution time
+    _WIRE_OPAQUE = ("state", "iterator", "rng", "opt_cfg")
+
 
 @dataclasses.dataclass(frozen=True)
-class MigrationTicket:
+class MigrationTicket(WireRecord):
     """The dump side's half of a migration: the image is durable, the
     process should exit with ``exit_code`` (85, HTCondor's self-checkpoint
     convention) and the next incarnation resumes from ``image_id`` on
@@ -197,3 +217,19 @@ class MigrationTicket:
     reason: str | None
     latency_s: float
     record: Any                       # core.migration.MigrationManifest
+
+    def _wire_encode_field(self, name: str, value):
+        # the migration record is a frozen dataclass with a JSON form of
+        # its own (to_meta) — reuse it rather than inventing a second one
+        if name == "record" and value is not None:
+            return value.to_meta()
+        return super()._wire_encode_field(name, value)
+
+    @classmethod
+    def _wire_decode_field(cls, name: str, value):
+        if name == "record" and isinstance(value, dict):
+            from repro.core.migration import MigrationManifest
+            known = {f.name for f in dataclasses.fields(MigrationManifest)}
+            return MigrationManifest(**{k: v for k, v in value.items()
+                                        if k in known})
+        return super()._wire_decode_field(name, value)

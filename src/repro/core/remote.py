@@ -43,6 +43,7 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
+from contextlib import contextmanager
 from urllib.parse import parse_qs
 
 from repro.core.storage import LocalDirTier, MemoryTier, RWGuard, Tier
@@ -89,17 +90,78 @@ class NetworkModel:
     """Per-request cost model: ``latency_s`` per operation plus
     ``nbytes / bandwidth_bps`` per transferred byte. Bandwidth is
     per-connection (like an object store's per-stream cap) — that is
-    exactly why parallel multipart beats one serial stream."""
+    exactly why parallel multipart beats one serial stream.
+
+    ``aggregate_bps`` adds the fleet-scale constraint the NERSC DMTCP
+    study names as the dominant obstacle: the store's TOTAL ingress is
+    capped, shared fluidly by the connections active at request time
+    (per-connection share = aggregate / active, still capped by
+    ``bandwidth_bps``). ``overload_conns``/``overload_penalty`` model
+    saturation beyond fluid sharing: past the ``overload_conns`` knee the
+    effective total degrades by ``(knee / active) ** penalty`` — request
+    throttling, retry storms and FS contention make twenty concurrent
+    checkpoint uploads move FEWER total bytes/sec than four. This is what
+    makes a coordinator's staggered dump wave measurably beat all-at-once
+    (see repro.fleet and benchmarks/fleet_wave.py); with the defaults
+    (no aggregate cap) behavior is exactly the old per-connection model.
+
+    ``active_connections``/``peak_active`` are maintained by the store
+    around each operation — tests assert a bandwidth budget was respected
+    via ``peak_active``."""
 
     def __init__(self, latency_s: float = 0.0,
-                 bandwidth_bps: float | None = None):
+                 bandwidth_bps: float | None = None,
+                 aggregate_bps: float | None = None,
+                 overload_conns: int = 0,
+                 overload_penalty: float = 1.0):
         self.latency_s = float(latency_s)
         self.bandwidth_bps = float(bandwidth_bps) if bandwidth_bps else None
+        self.aggregate_bps = float(aggregate_bps) if aggregate_bps else None
+        self.overload_conns = int(overload_conns)
+        self.overload_penalty = float(overload_penalty)
+        self.active_connections = 0
+        self.peak_active = 0
+        self._conn_lock = threading.Lock()
 
-    def cost_s(self, nbytes: int) -> float:
-        c = self.latency_s
+    @contextmanager
+    def connection(self):
+        """Count one in-flight operation; yields the active-connection
+        count at entry (the concurrency the op's cost is charged at)."""
+        with self._conn_lock:
+            self.active_connections += 1
+            active = self.active_connections
+            self.peak_active = max(self.peak_active, active)
+        try:
+            yield active
+        finally:
+            with self._conn_lock:
+                self.active_connections -= 1
+
+    def effective_total_bps(self, active: int) -> float | None:
+        """Total store throughput at ``active`` concurrent connections:
+        flat at ``aggregate_bps`` up to the overload knee, degrading as
+        ``(knee / active) ** penalty`` past it (None = uncapped)."""
+        if not self.aggregate_bps:
+            return None
+        total = self.aggregate_bps
+        if self.overload_conns and active > self.overload_conns:
+            total *= (self.overload_conns / active) ** self.overload_penalty
+        return total
+
+    def per_connection_bps(self, active: int = 1) -> float | None:
+        rates = []
         if self.bandwidth_bps:
-            c += nbytes / self.bandwidth_bps
+            rates.append(self.bandwidth_bps)
+        total = self.effective_total_bps(active)
+        if total:
+            rates.append(total / max(1, active))
+        return min(rates) if rates else None
+
+    def cost_s(self, nbytes: int, active: int = 1) -> float:
+        c = self.latency_s
+        rate = self.per_connection_bps(active)
+        if rate:
+            c += nbytes / rate
         return c
 
 
@@ -192,7 +254,12 @@ class SimulatedObjectStore:
                 self.stats["faults_injected"] += 1
             self.clock.advance(self.network.latency_s)   # failures aren't free
             raise self.faults.error_for(op, key, tries - 1)
-        self.clock.advance(self.network.cost_s(nbytes))
+        # charge the transfer at the concurrency it actually runs under:
+        # in realtime mode the advance() sleeps while the connection is
+        # counted, so overlapping ops genuinely contend for the shared
+        # aggregate bandwidth (and exceed the overload knee together)
+        with self.network.connection() as active:
+            self.clock.advance(self.network.cost_s(nbytes, active))
 
     # ------------------------------------------------------- object verbs
     def put(self, key: str, data):
@@ -566,6 +633,12 @@ class CachingTier(Tier):
         return (self.hot.chunk_index_enabled()
                 and self.cold.chunk_index_enabled())
 
+    def chunk_index_snapshot(self) -> frozenset | None:
+        # what makes this host WARM is the hot front — that is the
+        # inventory restore placement wants, not the cold pool (which
+        # every host can reach at remote cost)
+        return self.hot.chunk_index_snapshot()
+
     def has_chunk(self, h: str) -> bool:
         if self.cold.chunk_index_enabled():
             return self.cold.has_chunk(h)
@@ -639,6 +712,23 @@ def get_store(name: str, *, network: NetworkModel | None = None,
         return _STORES[name]
 
 
+def registered_tiers() -> dict:
+    """Public snapshot of the live remote-tier registrations:
+    ``"remote://name"`` / ``"cache+remote://name?front=host3"`` -> Tier.
+    The fleet topology model enumerates a process's tier registrations
+    through ``storage.registered_tiers()`` (which merges this with the
+    mem:// registry) instead of poking the private dicts."""
+    out = {}
+    with _REG_LOCK:
+        items = list(_TIERS.items())
+    for (scheme, name, front, prefix), tier in items:
+        qs = [f"{k}={v}" for k, v in (("front", front), ("prefix", prefix))
+              if v]
+        uri = f"{scheme}://{name}" + ("?" + "&".join(qs) if qs else "")
+        out[uri] = tier
+    return out
+
+
 def tier_from_uri(scheme: str, rest: str) -> Tier:
     """Resolve ``remote://`` / ``cache+remote://`` URIs (called by
     ``storage.as_tier``). Query parameters configure the simulation and
@@ -646,24 +736,40 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
     (scheme, store name):
 
       latency_ms=, bw_mbps=        NetworkModel (per request / connection)
+      agg_mbps=, knee=, penalty=   shared aggregate bandwidth cap +
+                                   overload knee/penalty (fleet-scale
+                                   saturation; see NetworkModel)
       fail_rate=, max_consecutive=, fixed_failures=, seed=   FaultPolicy
       realtime=1                   clock sleeps (benchmarks only)
       attempts=, backoff_ms=, backoff_max_ms=                RetryPolicy
       part_kb=, threshold_kb=      multipart geometry
       cache=<path>                 cache+remote only: LocalDirTier front
                                    at <path> (default: in-memory front)
+      front=<name>                 cache+remote only: NAMED hot front —
+                                   distinct fronts over one shared cold
+                                   store, so every fleet host gets its
+                                   own hot cache while dedup/gc stay
+                                   coordinated on the store's guard
+      prefix=<ns>                  key namespace inside the store: many
+                                   jobs share ONE store (one network, one
+                                   aggregate-bandwidth pool) without
+                                   image-id collisions — a fleet's whole
+                                   point of contention
 
-    The registry key is (scheme, store name) — NOT the full URI — so
-    ``remote://ck`` and ``remote://ck?attempts=6`` are the SAME tier
-    object (later params are ignored, like get_store's models), and
-    ``cache+remote://ck`` wraps the very RemoteTier ``remote://ck``
+    The registry key is (scheme, store name, front, prefix) — NOT the
+    full URI — so ``remote://ck`` and ``remote://ck?attempts=6`` are the
+    SAME tier object (later params are ignored, like get_store's models),
+    and ``cache+remote://ck`` wraps the very RemoteTier ``remote://ck``
     resolves to: all aliases of one store share one chunk index and one
     writer/reaper guard, which is what keeps a peer's gc out from under
-    an in-flight dump."""
+    an in-flight dump. ``front=`` variants are distinct CachingTier
+    objects (their OWN hot cache) over that one shared cold tier."""
     name, _, query = rest.partition("?")
     name = name.strip("/")
     params = parse_qs(query) if query else {}
-    key = (scheme, name)
+    front = _q(params, "front", str, "") if scheme == "cache+remote" else ""
+    prefix = _q(params, "prefix", str, "")
+    key = (scheme, name, front, prefix)
     with _REG_LOCK:
         if key in _TIERS:
             return _TIERS[key]
@@ -675,7 +781,10 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
     else:
         network = NetworkModel(
             latency_s=_q(params, "latency_ms", float, 0.0) / 1e3,
-            bandwidth_bps=_q(params, "bw_mbps", float, 0.0) * 1e6 or None)
+            bandwidth_bps=_q(params, "bw_mbps", float, 0.0) * 1e6 or None,
+            aggregate_bps=_q(params, "agg_mbps", float, 0.0) * 1e6 or None,
+            overload_conns=_q(params, "knee", int, 0),
+            overload_penalty=_q(params, "penalty", float, 1.0))
         faults = FaultPolicy(
             seed=_q(params, "seed", int, 0),
             fail_rate=_q(params, "fail_rate", float, 0.0),
@@ -689,7 +798,18 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
             backoff_max_s=_q(params, "backoff_max_ms", float, 1000.0) / 1e3)
         part_kb = _q(params, "part_kb", int, 1024)
         thresh_kb = _q(params, "threshold_kb", int, part_kb)
-        tier = RemoteTier(store, retry=retry, part_bytes=part_kb << 10,
+        tier = RemoteTier(store, prefix=prefix, retry=retry,
+                          part_bytes=part_kb << 10,
                           multipart_threshold=thresh_kb << 10)
     with _REG_LOCK:
         return _TIERS.setdefault(key, tier)
+
+
+def reset_tier_registry():
+    """TESTING ONLY: forget every registered store/tier so a fresh
+    scenario can reuse URI names without inheriting a prior network or
+    fault model. Live references to the old tiers keep working — only
+    the name->object mapping is cleared."""
+    with _REG_LOCK:
+        _STORES.clear()
+        _TIERS.clear()

@@ -162,6 +162,16 @@ class Tier:
     def chunk_index_enabled(self) -> bool:
         return self._chunk_index is not None
 
+    def chunk_index_snapshot(self) -> frozenset | None:
+        """Point-in-time copy of the in-memory chunk index, or None until
+        ``enable_chunk_index`` has run. The fleet placement planner scores
+        hosts by these snapshots (hot-front inventory) without issuing a
+        single storage op."""
+        if self._chunk_index is None:
+            return None
+        with self._index_lock:
+            return frozenset(self._chunk_index)
+
     def has_chunk(self, h: str) -> bool:
         if self._chunk_index is not None:
             with self._index_lock:
@@ -343,6 +353,23 @@ _MEM_TIERS: dict = {}
 _MEM_TIERS_LOCK = threading.Lock()
 
 TIER_SCHEMES = ("file", "mem", "remote", "cache+remote")
+
+
+def registered_tiers() -> dict:
+    """Public snapshot of every live process-local tier registration:
+    URI string -> Tier object (``mem://name``, ``remote://name``,
+    ``cache+remote://name[?front=...]``). This is the supported
+    introspection door — the fleet topology model enumerates a host's
+    live tiers (and their hot-cache chunk indexes) here instead of
+    poking the private registries. file:// tiers are constructed fresh
+    per resolution and therefore never appear."""
+    out = {}
+    with _MEM_TIERS_LOCK:
+        for name, tier in _MEM_TIERS.items():
+            out[f"mem://{name}"] = tier
+    from repro.core import remote
+    out.update(remote.registered_tiers())
+    return out
 
 
 def as_tier(t) -> Tier:

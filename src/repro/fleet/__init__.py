@@ -1,0 +1,49 @@
+"""repro.fleet — a DMTCP-style control plane over many sessions.
+
+CRIU checkpoints one process tree; DMTCP adds the piece HPC fleets
+actually operate: a COORDINATOR that speaks a wire protocol to many
+jobs and orchestrates global checkpoint/restart without ever touching
+their memory. This package is that layer over CheckpointSessions:
+
+  registry      JobRegistry — job id -> wire-level config, placement,
+                last committed image, heartbeat liveness (with a CAS
+                restore claim: no double restores, ever)
+  topology      ClusterTopology — hosts, device capacity, and hot-cache
+                inventory read from the live tier registrations
+  placement     PlacementPlanner — score hosts by hot-chunk overlap
+                with the image manifest; warm peers first, cold remote
+                as the fallback
+  coordinator   FleetCoordinator — global preemption waves (concurrent
+                drain, then dumps STAGGERED under a bandwidth budget so
+                the shared store stays below its overload knee),
+                node-failure re-placement, heartbeat sweeps
+  client        FleetClient + LoopbackTransport — the job-side endpoint
+                that owns the session and the live pytrees; every
+                coordinator<->job interaction is a JSON-round-tripped
+                wire frame (repro.api.wire)
+  messages      the control-plane vocabulary: Heartbeat, DrainCommand/
+                DrainAck, RestoreAck, ErrorReply
+  simcluster    SimCluster/SimJob — a deterministic fleet-in-a-process
+                (seeded arrivals, seeded mid-wave node failures) for
+                tests and benchmarks/fleet_wave.py
+
+The coordinator holds no session, pytree, or tier handle for any job:
+its entire world is wire frames and the registry — which is what makes
+the control plane testable, replayable, and honest about what travels."""
+from repro.fleet.client import FleetClient, HostDownError, \
+    LoopbackTransport
+from repro.fleet.coordinator import FleetCoordinator, WaveReport
+from repro.fleet.messages import (DrainAck, DrainCommand, ErrorReply,
+                                  Heartbeat, RestoreAck)
+from repro.fleet.placement import PlacementDecision, PlacementPlanner
+from repro.fleet.registry import JobRecord, JobRegistry
+from repro.fleet.simcluster import SimCluster, SimJob
+from repro.fleet.topology import ClusterTopology, HostInfo, retarget_root
+
+__all__ = [
+    "ClusterTopology", "DrainAck", "DrainCommand", "ErrorReply",
+    "FleetClient", "FleetCoordinator", "Heartbeat", "HostDownError",
+    "HostInfo", "JobRecord", "JobRegistry", "LoopbackTransport",
+    "PlacementDecision", "PlacementPlanner", "RestoreAck", "SimCluster",
+    "SimJob", "WaveReport", "retarget_root",
+]

@@ -1,0 +1,169 @@
+"""Job registry: the coordinator's only memory of the fleet.
+
+One ``JobRecord`` per job id — the session description AS WIRE DATA
+(never a live CheckpointSession), current placement, last-known step,
+last COMMITTED image, and heartbeat liveness. DMTCP's coordinator keeps
+exactly this shape of table: sockets and barriers, never page contents;
+here it is configs and image ids, never pytrees.
+
+Liveness is two distinct questions the tests keep apart:
+
+  * slow-but-alive — last heartbeat is old but within
+    ``heartbeat_timeout_s``: the job keeps its claim, nobody restores
+    over it;
+  * timed out — past the timeout: the job is presumed lost and becomes
+    a re-placement candidate, but only ONE actor wins ``claim_restore``
+    (a compare-and-set on the record's phase), which is what makes a
+    double restore impossible even when a node-failure handler and the
+    heartbeat sweeper race."""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Everything the coordinator knows about one job (all wire data).
+
+    ``phase`` lifecycle: registered -> running -> draining -> drained ->
+    dumped -> restoring -> running (next incarnation), with ``lost``
+    for a dead host / timed-out heartbeat pending re-placement."""
+    job_id: str
+    config_wire: dict
+    host: str | None = None
+    topology: dict | None = None
+    phase: str = "registered"
+    step: int = 0
+    image_id: str | None = None
+    image_step: int | None = None
+    state_digest: str | None = None
+    last_heartbeat: float = 0.0
+    heartbeats: int = 0
+    incarnation: int = 0
+
+    @property
+    def root_uri(self) -> str:
+        return self.config_wire["root"]
+
+
+class JobRegistry:
+    """Thread-safe table of JobRecords keyed by job id.
+
+    ``clock`` is a zero-arg callable in the coordinator's time domain
+    (SimCluster's virtual clock in tests, ``time.monotonic`` live)."""
+
+    def __init__(self, *, clock=None, heartbeat_timeout_s: float = 30.0):
+        self.clock = clock or (lambda: 0.0)
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self._jobs: dict = {}
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- lifecycle
+    def register(self, job_id: str, config_wire: dict, *,
+                 host: str | None = None,
+                 topology: dict | None = None) -> JobRecord:
+        if not isinstance(config_wire, dict):
+            raise TypeError("JobRegistry.register takes the config as "
+                            "WIRE DATA (SessionConfig.to_wire()), got "
+                            f"{type(config_wire).__name__}")
+        with self._lock:
+            if job_id in self._jobs:
+                raise ValueError(f"job {job_id!r} already registered")
+            rec = JobRecord(job_id=job_id, config_wire=dict(config_wire),
+                            host=host, topology=topology, phase="running",
+                            last_heartbeat=self.clock())
+            self._jobs[job_id] = rec
+            return rec
+
+    def get(self, job_id: str) -> JobRecord:
+        with self._lock:
+            return self._jobs[job_id]
+
+    def jobs(self, *, phase: str | None = None) -> list:
+        with self._lock:
+            recs = list(self._jobs.values())
+        return [r for r in recs if phase is None or r.phase == phase]
+
+    def on_host(self, host: str) -> list:
+        return [r for r in self.jobs() if r.host == host]
+
+    # ----------------------------------------------------------- liveness
+    def heartbeat(self, job_id: str, step: int,
+                  now: float | None = None) -> JobRecord:
+        with self._lock:
+            rec = self._jobs[job_id]
+            rec.last_heartbeat = self.clock() if now is None else now
+            rec.heartbeats += 1
+            rec.step = max(rec.step, int(step))
+            return rec
+
+    def alive(self, job_id: str, now: float | None = None) -> bool:
+        now = self.clock() if now is None else now
+        with self._lock:
+            rec = self._jobs[job_id]
+            if rec.phase in ("lost", "dead"):
+                return False
+            return (now - rec.last_heartbeat) <= self.heartbeat_timeout_s
+
+    def stale_jobs(self, now: float | None = None) -> list:
+        """Jobs past the heartbeat timeout that are not already being
+        handled — the re-placement work list. Slow-but-alive jobs (old
+        heartbeat, within timeout) never appear here."""
+        now = self.clock() if now is None else now
+        out = []
+        with self._lock:
+            for rec in self._jobs.values():
+                if rec.phase in ("restoring", "lost", "dead", "dumped"):
+                    continue
+                if (now - rec.last_heartbeat) > self.heartbeat_timeout_s:
+                    out.append(rec)
+        return out
+
+    # ------------------------------------------------------- dump/restore
+    def record_dump(self, job_id: str, *, image_id: str, step: int,
+                    state_digest: str | None = None):
+        with self._lock:
+            rec = self._jobs[job_id]
+            rec.image_id = image_id
+            rec.image_step = int(step)
+            rec.step = max(rec.step, int(step))
+            rec.state_digest = state_digest
+            rec.phase = "dumped"
+
+    def claim_restore(self, job_id: str) -> bool:
+        """Compare-and-set: True for exactly one caller per incarnation.
+        The loser (a racing failure handler, a second heartbeat sweep)
+        must NOT restore — this is the no-double-restore guarantee."""
+        with self._lock:
+            rec = self._jobs[job_id]
+            if rec.phase == "restoring":
+                return False
+            rec.phase = "restoring"
+            return True
+
+    def complete_restore(self, job_id: str, *, host: str, step: int):
+        with self._lock:
+            rec = self._jobs[job_id]
+            rec.host = host
+            rec.step = int(step)
+            rec.phase = "running"
+            rec.incarnation += 1
+            rec.last_heartbeat = self.clock()
+
+    def mark(self, job_id: str, phase: str):
+        with self._lock:
+            self._jobs[job_id].phase = phase
+
+    def mark_host_lost(self, host: str) -> list:
+        """Every non-durable job on a dead host becomes ``lost`` (its
+        last COMMITTED image is untouched — that is what re-placement
+        restores from). Returns the affected records."""
+        out = []
+        with self._lock:
+            for rec in self._jobs.values():
+                if rec.host == host and rec.phase not in ("dead",):
+                    if rec.phase != "restoring":
+                        rec.phase = "lost"
+                    out.append(rec)
+        return out

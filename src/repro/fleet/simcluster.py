@@ -1,0 +1,287 @@
+"""SimCluster: a deterministic many-job fleet for tests and benchmarks.
+
+Everything the coordinator needs a cluster to be, in one process:
+
+  * hosts with device capacity and per-host hot caches — every job's
+    root tier is ``cache+remote://<store>?front=<host>&prefix=<job>``:
+    ONE shared simulated object store (one network, one aggregate
+    bandwidth pool — the thing a wave contends for), a hot front per
+    host, a key namespace per job;
+  * seeded jobs — ``SimJob`` is a tiny deterministic trainer whose
+    state is a pure function of (seed, step), so bit-identity across
+    dump/restore/re-place is checkable by digest;
+  * a seeded arrival process (exponential inter-arrival draws) that
+    places jobs on the least-loaded host as they appear;
+  * seeded node failures — armed to fire when the Nth wire frame of a
+    chosen kind crosses a transport (``arm_failure``), so "host dies
+    mid-wave" is an exact, replayable protocol moment, not a sleep
+    race;
+  * a virtual cluster clock (``tick`` advances it, steps running jobs
+    and emits their heartbeats through the wire path).
+
+Jobs run ``serial=True`` sessions: each dump is one thread of storage
+ops, so the store's ``peak_active`` measures exactly the wave's
+concurrency policy — the staggered-vs-naive comparison is about the
+COORDINATOR's batching, not thread-pool incidentals."""
+from __future__ import annotations
+
+import itertools
+import threading
+
+import numpy as np
+
+from repro.api.config import CodecPolicy, MigrationPolicy, SessionConfig
+from repro.core.remote import get_store
+from repro.fleet.client import FleetClient, LoopbackTransport
+from repro.fleet.coordinator import FleetCoordinator
+from repro.fleet.placement import PlacementPlanner
+from repro.fleet.registry import JobRegistry
+from repro.fleet.topology import ClusterTopology
+
+_STORE_SEQ = itertools.count()
+
+
+class SimJob:
+    """Deterministic toy trainer: ``state(seed, step)`` is reproducible,
+    so two incarnations that agree on (seed, step) agree bit-for-bit.
+
+    Example::
+
+        j = SimJob("j0", seed=7)
+        j.run(10)
+        assert j.step == 10
+    """
+
+    def __init__(self, job_id: str, *, seed: int = 0, leaves: int = 4,
+                 leaf_kb: int = 32):
+        self.job_id = job_id
+        self.seed = int(seed)
+        rng = np.random.default_rng(self.seed)
+        n = max(1, (leaf_kb * 1024) // 4)
+        self.params = {f"w{i}": rng.standard_normal(n).astype(np.float32)
+                       for i in range(leaves)}
+        self._delta = {k: rng.standard_normal(n).astype(np.float32) * 1e-3
+                       for k in self.params}
+        self.step = 0
+        self.running = True
+        self.paused = False
+
+    def run(self, steps: int = 1):
+        if not self.running or self.paused:
+            return
+        for _ in range(int(steps)):
+            for k, w in self.params.items():
+                w += self._delta[k]
+            self.step += 1
+
+    def state(self) -> dict:
+        return {"params": {k: v.copy() for k, v in self.params.items()},
+                "step": np.int64(self.step)}
+
+    def adopt(self, state: dict, step: int):
+        """Become the restored incarnation: take the image's leaves."""
+        self.params = {k: np.asarray(v).copy()
+                       for k, v in state["params"].items()}
+        self.step = int(step)
+        self.paused = False
+        self.running = True
+
+
+class SimCluster:
+    """Hosts + jobs + coordinator, wired through loopback transports.
+
+    Example::
+
+        cl = SimCluster(hosts=4, agg_mbps=200, knee=4)
+        cl.submit_jobs(8, steps=5)
+        report = cl.coordinator.preemption_wave()
+        assert len(report.dumped) == 8
+    """
+
+    def __init__(self, *, hosts: int = 4, devices_per_host: int = 4,
+                 store: str | None = None, seed: int = 0,
+                 latency_ms: float = 0.0, bw_mbps: float = 0.0,
+                 agg_mbps: float = 0.0, knee: int = 0,
+                 penalty: float = 1.0, realtime: bool = False,
+                 heartbeat_timeout_s: float = 30.0,
+                 dump_concurrency: int = 4,
+                 leaf_kb: int = 32, leaves: int = 4,
+                 codec: CodecPolicy | None = None,
+                 extra_uri_params: str = "", policy=None):
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.store_name = store or f"fleet{next(_STORE_SEQ)}"
+        self._uri_params = "&".join(
+            p for p in (f"latency_ms={latency_ms}" if latency_ms else "",
+                        f"bw_mbps={bw_mbps}" if bw_mbps else "",
+                        f"agg_mbps={agg_mbps}" if agg_mbps else "",
+                        f"knee={knee}" if knee else "",
+                        f"penalty={penalty}" if penalty != 1.0 else "",
+                        "realtime=1" if realtime else "",
+                        extra_uri_params) if p)
+        self.leaf_kb, self.leaves = int(leaf_kb), int(leaves)
+        self.codec = codec or CodecPolicy()     # lossless: digests travel
+        self.now = 0.0
+        self.jobs: dict = {}                    # job_id -> SimJob
+        self.clients: dict = {}                 # job_id -> FleetClient
+        self.all_transports: list = []          # every incarnation's wire
+        self._armed: list = []                  # (kind, countdown, host)
+        self._frame_lock = threading.Lock()
+        self.topology = ClusterTopology()
+        for i in range(int(hosts)):
+            self.topology.add_host(f"h{i}", devices=devices_per_host)
+        registry = JobRegistry(clock=self.clock,
+                               heartbeat_timeout_s=heartbeat_timeout_s)
+        self.coordinator = FleetCoordinator(
+            topology=self.topology, registry=registry,
+            planner=PlacementPlanner(self.topology, registry),
+            clock=self.clock, heartbeat_timeout_s=heartbeat_timeout_s,
+            dump_concurrency=dump_concurrency, spawner=self.spawn,
+            policy=policy)
+
+    # ------------------------------------------------------------- plumbing
+    def clock(self) -> float:
+        return self.now
+
+    @property
+    def store(self):
+        return get_store(self.store_name)
+
+    def root_uri(self, job_id: str, host_id: str) -> str:
+        uri = (f"cache+remote://{self.store_name}"
+               f"?front={host_id}&prefix={job_id}")
+        return uri + ("&" + self._uri_params if self._uri_params else "")
+
+    def _config(self, job_id: str, host_id: str) -> SessionConfig:
+        return SessionConfig(root=self.root_uri(job_id, host_id),
+                             codec=self.codec, serial=True,
+                             migration=MigrationPolicy(arch="simjob"))
+
+    # ------------------------------------------------------------ admission
+    def least_loaded_host(self) -> str:
+        load = self.topology.device_load(self.coordinator.registry)
+        live = self.topology.hosts()
+        return min(live, key=lambda h: (load.get(h.host_id, 0),
+                                        h.host_id)).host_id
+
+    def submit_jobs(self, n: int, *, steps: int = 3,
+                    arrival_rate: float | None = None) -> list:
+        """Admit ``n`` seeded jobs. With ``arrival_rate`` the cluster
+        clock advances by seeded exponential inter-arrival gaps (a
+        Poisson arrival process); each job lands on the least-loaded
+        live host and runs ``steps`` initial steps."""
+        ids = []
+        for _ in range(int(n)):
+            if arrival_rate:
+                self.now += float(self.rng.exponential(1.0 / arrival_rate))
+            job_id = f"j{len(self.jobs)}"
+            host = self.least_loaded_host()
+            job = SimJob(job_id, seed=self.seed * 1000 + len(self.jobs),
+                         leaves=self.leaves, leaf_kb=self.leaf_kb)
+            job.run(steps)
+            self._attach(job, host)
+            ids.append(job_id)
+        return ids
+
+    def _attach(self, job: SimJob, host: str):
+        cfg = self._config(job.job_id, host)
+        client = self._client(job, cfg.to_wire(), host)
+        transport = LoopbackTransport(client, host=host,
+                                      on_send=self._on_frame)
+        self.jobs[job.job_id] = job
+        self.clients[job.job_id] = client
+        self.all_transports.append(transport)
+        self.coordinator.attach(job.job_id, transport, host=host,
+                                config_wire=cfg.to_wire())
+
+    def _client(self, job: SimJob, config_wire: dict,
+                host: str) -> FleetClient:
+        def drain():
+            job.paused = True
+            return job.step
+
+        def restored(res):
+            job.adopt(res.state, res.step)
+
+        return FleetClient(
+            job.job_id, config_wire, host=host,
+            state_provider=lambda: (job.state(), job.step),
+            on_drain=drain, on_restore=restored)
+
+    def spawn(self, rec, host: str, config_wire: dict) -> LoopbackTransport:
+        """The coordinator's job launcher: a fresh incarnation of the
+        job on ``host`` (new client, new session over the retargeted
+        config) — state arrives via the RestoreRequest that follows."""
+        job = self.jobs[rec.job_id]
+        job.paused = True                     # old incarnation is gone
+        client = self._client(job, config_wire, host)
+        self.clients[rec.job_id] = client
+        transport = LoopbackTransport(client, host=host,
+                                      on_send=self._on_frame)
+        self.all_transports.append(transport)
+        return transport
+
+    # ------------------------------------------------------------ liveness
+    def tick(self, dt: float = 1.0, *, steps: int = 1,
+             heartbeat: bool = True, mute: tuple = ()):
+        """Advance the cluster: clock += dt, running jobs step, and (by
+        default) every live job's heartbeat crosses the wire. ``mute``
+        silences chosen jobs — how a test makes one job look dead."""
+        self.now += float(dt)
+        for job_id, job in self.jobs.items():
+            job.run(steps)
+            if heartbeat and job_id not in mute and job.running \
+                    and not job.paused \
+                    and self.topology.alive(self._host_of(job_id)):
+                self.coordinator.deliver(
+                    self.clients[job_id].heartbeat(self.now))
+
+    def _host_of(self, job_id: str) -> str:
+        return self.coordinator.registry.get(job_id).host
+
+    # ------------------------------------------------------------- failures
+    def fail_host(self, host: str):
+        """Kill a host NOW: its transports stop delivering, its hot
+        fronts stop counting, its jobs are lost until re-placed."""
+        self.topology.fail_host(host)
+        for job_id, t in self.coordinator.transports.items():
+            if t.host == host:
+                t.dead = True
+        self.coordinator.registry.mark_host_lost(host)
+
+    def arm_failure(self, *, kind: str, nth: int, host: str | None = None):
+        """Seeded chaos: when the ``nth`` wire frame of ``kind`` (e.g.
+        "MigrateRequest") is about to cross any transport, kill
+        ``host`` (default: the frame's own target host). Exact and
+        replayable — the same schedule produces the same wave."""
+        self._armed.append([kind, int(nth), host])
+
+    def seeded_failures(self, count: int, *, kind: str = "MigrateRequest",
+                        span: int = 10) -> list:
+        """Draw ``count`` distinct frame ordinals in [1, span] from the
+        cluster seed and arm them (host = each frame's target): the
+        acceptance harness's "2 seeded node failures mid-wave"."""
+        picks = sorted(self.rng.choice(np.arange(1, span + 1),
+                                       size=count, replace=False).tolist())
+        for nth in picks:
+            self.arm_failure(kind=kind, nth=nth)
+        return picks
+
+    def _on_frame(self, host: str, frame: dict):
+        with self._frame_lock:
+            for armed in self._armed:
+                kind, nth, target = armed
+                if frame.get("kind") != kind:
+                    continue
+                armed[1] = nth - 1
+                if armed[1] == 0:
+                    self.fail_host(target or host)
+            self._armed = [a for a in self._armed if a[1] > 0]
+
+    # ------------------------------------------------------------- digests
+    def job_digest(self, job_id: str) -> str:
+        """The job's CURRENT logical-state digest (for bit-identity
+        assertions against dump records and restore acks)."""
+        from repro.core.dump import flatten_with_paths
+        from repro.core.integrity import tree_digest
+        return tree_digest(flatten_with_paths(self.jobs[job_id].state()))

@@ -89,6 +89,15 @@ class FlakyTier(Tier):
         self._attempts: dict = {}
         self._lock = threading.Lock()
 
+    def reset(self):
+        """Rewind the attempt counters so the SAME seeded schedule
+        replays from the start — a wave retry sees the identical fault
+        pattern without rebuilding the tier (rebuilding loses the
+        schedule position AND the stats). Cumulative ``stats`` are kept;
+        zero them explicitly if a test wants per-replay counts."""
+        with self._lock:
+            self._attempts.clear()
+
     def _gate(self, op: str, rel: str):
         with self._lock:
             attempt = self._attempts.get((op, rel), 0)

@@ -17,6 +17,7 @@ EXPECTED_ALL = {
     "DumpRequest", "DumpReceipt",
     "RestoreRequest", "RestoreResult",
     "MigrateRequest", "MigrationTicket",
+    "WIRE_SCHEMA_VERSION", "WireVersionError", "WireCodingError",
     "capabilities", "Capability", "CapabilityReport", "TABLE1",
 }
 
@@ -114,12 +115,96 @@ def test_session_constructor_takes_config_and_overrides():
     assert params == ["self", "config", "overrides"]
 
 
+# wire message -> (wire-visible fields, runtime-only fields that never
+# travel). This is the WIRE SCHEMA within major 1: removing or reordering
+# an entry is a major bump; adding fields (with defaults) is a minor one.
+EXPECTED_WIRE_SCHEMA = {
+    "SessionConfig": (["root", "replicas", "retention", "codec",
+                       "async_dumps", "preemption", "migration",
+                       "chunk_bytes", "serial"], ["executor"]),
+    "RetentionPolicy": (["keep_last", "keep_every"], []),
+    "CodecPolicy": (["params", "optimizer", "incremental", "device",
+                     "chunking"], ["custom"]),
+    "AsyncPolicy": (["enabled", "max_pending"], []),
+    "PreemptionPolicy": (["install_signals", "signals", "exit_code"], []),
+    "MigrationPolicy": (["arch", "topology", "verify_digest",
+                         "predump_rounds"], ["mesh", "monitor", "restart"]),
+    "DumpRequest": (["step", "meta", "topology", "mode"], ["state"]),
+    "DumpReceipt": (["step", "mode", "committed", "image_id", "stats",
+                     "duration_s"], []),
+    "RestoreRequest": (["image_id", "host_count", "dp_degree",
+                        "global_batch", "verify_digest",
+                        "allow_env_mismatch", "lazy", "prefetch_order"],
+                       ["target_struct", "shardings", "mesh"]),
+    "MigrateRequest": (["step", "data_state", "meta_extra", "reason"],
+                       ["state", "iterator", "rng", "opt_cfg"]),
+    "MigrationTicket": (["exit_code", "image_id", "step", "reason",
+                         "latency_s", "record"], []),
+}
+
+
+def test_wire_schema_snapshot():
+    assert api.WIRE_SCHEMA_VERSION == "1.0"
+    for cls_name, (wire, opaque) in EXPECTED_WIRE_SCHEMA.items():
+        cls = getattr(api, cls_name)
+        assert list(cls.wire_fields()) == wire, \
+            f"{cls_name} wire schema changed"
+        assert sorted(cls._WIRE_OPAQUE) == sorted(opaque), cls_name
+
+
+def test_wire_round_trip_is_loss_free():
+    import json
+    samples = [
+        api.DumpRequest(state=None, step=7, meta={"k": 1}, mode="async"),
+        api.DumpReceipt(step=7, mode="sync", committed=True,
+                        image_id="step_0000000007", stats={"chunks": 3}),
+        api.RestoreRequest(image_id="step_0000000007", host_count=2,
+                           lazy=True, prefetch_order=("params",)),
+        api.MigrateRequest(state=None, reason="preemption_wave"),
+        api.SessionConfig(
+            root="cache+remote://ck?front=h0", replicas=("mem://hot",),
+            codec=api.CodecPolicy(optimizer="delta8"),
+            preemption=api.PreemptionPolicy(install_signals=True)),
+    ]
+    for msg in samples:
+        d = json.loads(json.dumps(msg.to_wire()))
+        assert d["kind"] == type(msg).__name__
+        assert d["schema_version"] == api.WIRE_SCHEMA_VERSION
+        assert type(msg).from_wire(d) == msg, type(msg).__name__
+
+
+def test_wire_rejects_future_major_and_junk():
+    import pytest
+    good = api.DumpReceipt(step=1, mode="sync", committed=True).to_wire()
+    with pytest.raises(api.WireVersionError):
+        api.DumpReceipt.from_wire({**good, "schema_version": "2.0"})
+    with pytest.raises(api.WireVersionError):
+        api.DumpReceipt.from_wire({**good, "kind": "RestoreRequest"})
+    with pytest.raises(api.WireVersionError):
+        api.DumpReceipt.from_wire("not a dict")
+
+
+def test_wire_tolerates_unknown_fields_within_major():
+    good = api.DumpReceipt(step=1, mode="sync", committed=True).to_wire()
+    newer = {**good, "schema_version": "1.9", "from_the_future": [1, 2]}
+    assert api.DumpReceipt.from_wire(newer).step == 1
+
+
+def test_wire_refuses_runtime_only_fields():
+    import pytest
+    with pytest.raises(api.WireCodingError):
+        api.DumpRequest(state={"w": object()}, step=1).to_wire()
+    with pytest.raises(api.WireCodingError):
+        api.SessionConfig(root=object()).to_wire()    # pre-built tier
+
+
 def test_table1_covers_paper_rows_plus_precopy_extensions():
     # rows 1-10 are the paper's Table 1; 11-12 extend it with CRIU's
     # pre-copy / post-copy mechanisms (pre-dump, lazy-pages); 13 with the
     # migration path's practical bottleneck — remote image transfer; 14
-    # with the dump path's hot loop — device-side fused encode+digest
-    assert sorted(api.TABLE1) == list(range(1, 15))
+    # with the dump path's hot loop — device-side fused encode+digest;
+    # 15 with DMTCP's territory — a coordinator over many jobs
+    assert sorted(api.TABLE1) == list(range(1, 16))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
@@ -127,3 +212,4 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     assert api.TABLE1[12][2] == "lazy_restore"
     assert api.TABLE1[13][2] == "remote_storage"
     assert api.TABLE1[14][2] == "device_codec"
+    assert api.TABLE1[15][2] == "fleet_coordination"

@@ -123,7 +123,13 @@ def test_docs_mention_the_new_knobs():
                  # CodecPolicy knobs, the digest algorithm, the
                  # fallback semantics, and the chunker choice
                  'device="auto"', 'chunking="cdc"', "pmac32x2-v1",
-                 "host codec", "fallback", "DEVICE_MIN_BYTES"):
+                 "host codec", "fallback", "DEVICE_MIN_BYTES",
+                 # fleet coordination surface (ISSUE 7): wave knobs,
+                 # placement scoring, and the wire contract
+                 "preemption_wave", "dump_concurrency", "stagger",
+                 "heartbeat_timeout_s", "front=", "WIRE_SCHEMA_VERSION",
+                 "HostDownError", "restore_job", "replace_lost",
+                 "check_heartbeats", "ErrorReply"):
         assert knob in guide, f"operator guide lost mention of {knob!r}"
     readme = (ROOT / "README.md").read_text()
     assert 'mode="pre_dump"' in readme and "lazy=True" in readme
