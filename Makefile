@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: check test lint api-check docs-check cov-remote bench-compare \
 	bench-smoke bench-facade bench-migration bench-stw bench-remote \
-	bench-codec bench-fleet run-example
+	bench-codec bench-fleet bench-serve run-example
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -76,6 +76,13 @@ bench-remote:
 # random (bit-identical restores hard-asserted); records BENCH_<pr>.json
 bench-fleet:
 	python benchmarks/fleet_wave.py
+
+# serving-plane migration: 100% session survival + bit-identical
+# continuations (eager AND lazy) are hard gates, as is lazy
+# autoscale-from-image p99 TTFT strictly below eager; records
+# BENCH_<pr>.json
+bench-serve:
+	python benchmarks/serve_migration.py
 
 # run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
 run-example:

@@ -16,4 +16,5 @@ exec python -m pytest -q \
     tests/test_remote_tier.py \
     tests/test_remote_properties.py \
     tests/test_fleet.py \
+    tests/test_serving_plane.py \
     "$@"

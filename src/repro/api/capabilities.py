@@ -150,6 +150,9 @@ TABLE1 = {
     15: ("Coordinated multi-job checkpointing (DMTCP-style fleet)",
          "Not working (CRIU is one-process-tree; DMTCP is a separate "
          "project)", "fleet_coordination"),
+    16: ("Live serving plane under traffic (multi-session migration)",
+         "Not working (established connections pin the restore to the "
+         "same machine)", "live_serving"),
 }
 
 _ROW_BY_CAP = {cap: (row, name, verdict)
@@ -460,6 +463,45 @@ def _probe_fleet() -> list:
     return out
 
 
+def _probe_serving() -> list:
+    """A real traffic-driven plane, dumped mid-flight and restored:
+    seeded arrivals on a tiny model, a decode-boundary drain, one
+    serving image (pool + session table + queue), and an eager adopt
+    that must carry every in-flight session across."""
+    out = []
+    try:
+        import jax
+        from repro import configs
+        from repro.api.requests import RestoreRequest
+        from repro.api.session import CheckpointSession
+        from repro.models.model import LM
+        from repro.serving import SessionManager, TrafficGenerator
+        cfg = configs.get_tiny("gemma2-2b")
+        lm = LM(cfg)
+        mgr = SessionManager(lm, lm.init(jax.random.PRNGKey(0)),
+                             slots=2, page_len=12)
+        gen = TrafficGenerator(seed=11, vocab_size=cfg.vocab_size,
+                               rate=1.0, prompt_support=(4,),
+                               target_max=4)
+        mgr.run(3, traffic=gen)
+        with CheckpointSession("mem://cap-serving") as sess:
+            mgr.drain()
+            mgr.checkpoint(sess, traffic=gen.state())
+            live = set(mgr.live_sids())
+            mgr2, res = SessionManager.restore_from(sess, lm)
+            ok = (res.digest_verified is True
+                  and live <= set(mgr2.sessions)
+                  and mgr2.clock == mgr.clock)
+        out.append(_cap(
+            "live_serving", ok,
+            f"traffic-driven plane dumped at decode boundary and "
+            f"adopted on a fresh replica: {len(live)} in-flight "
+            f"sessions survived, digest verified, clock {mgr2.clock}"))
+    except Exception as e:  # pragma: no cover
+        out.append(_cap("live_serving", False, f"probe failed: {e!r}"))
+    return out
+
+
 def _probe_preemption() -> list:
     out = []
     in_main = threading.current_thread() is threading.main_thread()
@@ -500,7 +542,7 @@ def capabilities(config=None) -> CapabilityReport:
     caps = (_probe_tiers() + _probe_engine(config) + _probe_codecs()
             + _probe_integrity() + _probe_topology() + _probe_precopy()
             + _probe_remote() + _probe_device_codec() + _probe_fleet()
-            + _probe_preemption())
+            + _probe_serving() + _probe_preemption())
     missing = [c for c in _ROW_BY_CAP if c not in {x.name for x in caps}]
     assert not missing, f"Table-1 rows without a probe: {missing}"
     return CapabilityReport(env=_manifest.env_fingerprint(),

@@ -278,6 +278,13 @@ class MigrationOrchestrator:
         meta = train_meta(arch=self.arch or "unknown", step=step,
                           data_state=data_state or {}, opt_cfg=opt_cfg,
                           extra=meta_extra)
+        if meta_extra and "serve_plane" in meta_extra:
+            # a serving plane migrated through the trainer path: the
+            # image must announce itself so restorers rebuild sessions
+            meta["job_kind"] = "serve"
+            meta["serve_plane"] = meta_extra["serve_plane"]
+            if "prefetch_hint" in meta_extra:
+                meta["prefetch_hint"] = meta_extra["prefetch_hint"]
         meta[MIGRATION_META_KEY] = rec.to_meta()
         out = self.ckpt.save(host, step=step, meta=meta,
                              topology=_topology_of(self.mesh, self.topology))

@@ -80,16 +80,31 @@ class RestorePlan:
         optimizer moments (only the next update step needs those). Within
         a group, manifest order. A restored-but-idle job faulting in this
         order can usually serve/compute before the image fully arrives —
-        CRIU's lazy-pages argument, leaf-granular."""
+        CRIU's lazy-pages argument, leaf-granular.
+
+        A dump may override the static grouping by recording
+        ``meta["prefetch_hint"]`` — an ordered list of path prefixes
+        (e.g. the serving plane's activity-ranked sessions): leaves
+        matching an earlier prefix stream first; unmatched leaves keep
+        the params-first default after all hinted ones."""
+        hint = list((self.manifest.get("meta") or {})
+                    .get("prefetch_hint") or [])
+
         def group(path: str) -> int:
             if path.startswith("params/") or path == "params":
                 return 0
             if path.startswith("opt/") or "/opt/" in path:
                 return 2
             return 1
+
+        def rank(path: str) -> tuple:
+            for i, pre in enumerate(hint):
+                if path == pre or path.startswith(pre.rstrip("/") + "/"):
+                    return (0, i, 0)
+            return (1, 0, group(path))
         recs = self.manifest["leaves"]
         return tuple(r["path"] for r in sorted(
-            recs, key=lambda r: group(r["path"])))
+            recs, key=lambda r: rank(r["path"])))
 
 
 def plan_dump(leaves, *, step: int, image_id: str | None = None,

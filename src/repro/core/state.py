@@ -23,7 +23,17 @@ def train_meta(*, arch: str, step: int, data_state: dict,
 
 
 def serve_meta(*, arch: str, tokens_done, prompts: dict | None = None,
+               sessions: int | None = None, queue_depth: int | None = None,
                extra: dict | None = None) -> dict:
-    return {"job_kind": "serve", "arch": arch,
+    """Serving-image descriptor. ``sessions``/``queue_depth`` summarize
+    a multi-session plane (the full table travels as
+    ``meta["serve_plane"]``) so operators can triage images without
+    parsing it."""
+    meta = {"job_kind": "serve", "arch": arch,
             "tokens_done": int(tokens_done), "prompts": prompts or {},
             "extra": extra or {}}
+    if sessions is not None:
+        meta["sessions"] = int(sessions)
+    if queue_depth is not None:
+        meta["queue_depth"] = int(queue_depth)
+    return meta

@@ -23,9 +23,10 @@ their memory. This package is that layer over CheckpointSessions:
                 wire frame (repro.api.wire)
   messages      the control-plane vocabulary: Heartbeat, DrainCommand/
                 DrainAck, RestoreAck, ErrorReply
-  simcluster    SimCluster/SimJob — a deterministic fleet-in-a-process
-                (seeded arrivals, seeded mid-wave node failures) for
-                tests and benchmarks/fleet_wave.py
+  simcluster    SimCluster/SimJob/SimServeJob — a deterministic
+                fleet-in-a-process (seeded arrivals, seeded mid-wave
+                node failures, live serving planes as jobs) for tests
+                and benchmarks/fleet_wave.py
 
 The coordinator holds no session, pytree, or tier handle for any job:
 its entire world is wire frames and the registry — which is what makes
@@ -37,7 +38,7 @@ from repro.fleet.messages import (DrainAck, DrainCommand, ErrorReply,
                                   Heartbeat, RestoreAck)
 from repro.fleet.placement import PlacementDecision, PlacementPlanner
 from repro.fleet.registry import JobRecord, JobRegistry
-from repro.fleet.simcluster import SimCluster, SimJob
+from repro.fleet.simcluster import SimCluster, SimJob, SimServeJob
 from repro.fleet.topology import ClusterTopology, HostInfo, retarget_root
 
 __all__ = [
@@ -45,5 +46,5 @@ __all__ = [
     "FleetClient", "FleetCoordinator", "Heartbeat", "HostDownError",
     "HostInfo", "JobRecord", "JobRegistry", "LoopbackTransport",
     "PlacementDecision", "PlacementPlanner", "RestoreAck", "SimCluster",
-    "SimJob", "WaveReport", "retarget_root",
+    "SimJob", "SimServeJob", "WaveReport", "retarget_root",
 ]

@@ -58,7 +58,8 @@ class FleetClient:
 
     def __init__(self, job_id: str, config_wire: dict, *, host: str = "",
                  state_provider=None, on_drain=None, on_restore=None,
-                 iterator_provider=None):
+                 iterator_provider=None, meta_provider=None,
+                 sessions_provider=None):
         self.job_id = job_id
         self.host = host
         self.config = SessionConfig.from_wire(config_wire)
@@ -68,6 +69,11 @@ class FleetClient:
         self.on_drain = on_drain
         self.on_restore = on_restore
         self.iterator_provider = iterator_provider
+        # job-side metadata the wire cannot know: a serving plane's
+        # session table rides every dump/migrate as meta so the next
+        # incarnation can rebuild the plane from the image alone
+        self.meta_provider = meta_provider
+        self.sessions_provider = sessions_provider
         self.last_restore = None           # RestoreResult of the last ack
         self.commands_executed = 0
 
@@ -92,15 +98,22 @@ class FleetClient:
             return DrainAck(job_id=self.job_id, step=int(step))
         if isinstance(msg, DumpRequest):
             state, step = self.state_provider()
+            meta = msg.meta
+            if self.meta_provider:
+                meta = {**(msg.meta or {}), **self.meta_provider()}
             req = dataclasses.replace(
-                msg, state=state, step=step if msg.step < 0 else msg.step)
+                msg, state=state, meta=meta,
+                step=step if msg.step < 0 else msg.step)
             return self.session.dump(req)
         if isinstance(msg, MigrateRequest):
             state, step = self.state_provider()
             it = self.iterator_provider() if self.iterator_provider \
                 else None
+            extra = msg.meta_extra
+            if self.meta_provider:
+                extra = {**(msg.meta_extra or {}), **self.meta_provider()}
             req = dataclasses.replace(
-                msg, state=state, iterator=it,
+                msg, state=state, iterator=it, meta_extra=extra,
                 step=msg.step if msg.step is not None else int(step))
             return self.session.migrate(req)
         if isinstance(msg, RestoreRequest):
@@ -130,7 +143,9 @@ class FleetClient:
         """The job's outbound beacon, already in wire form."""
         return Heartbeat(job_id=self.job_id,
                          step=int(self.state_provider()[1]),
-                         sent_at=float(now)).to_wire()
+                         sent_at=float(now),
+                         sessions=int(self.sessions_provider())
+                         if self.sessions_provider else 0).to_wire()
 
     def close(self):
         self.session.close()

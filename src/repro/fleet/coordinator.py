@@ -108,10 +108,13 @@ class FleetCoordinator:
 
     # ------------------------------------------------------------ plumbing
     def attach(self, job_id: str, transport, *, host: str,
-               config_wire: dict, topology: dict | None = None):
-        """Admit a job: its transport plus its WIRE-LEVEL description."""
+               config_wire: dict, topology: dict | None = None,
+               kind: str = "train"):
+        """Admit a job: its transport plus its WIRE-LEVEL description.
+        ``kind`` picks the drain boundary ("serve" jobs pause at a
+        decode step, trainers at a training step)."""
         self.registry.register(job_id, config_wire, host=host,
-                               topology=topology)
+                               topology=topology, kind=kind)
         self.transports[job_id] = transport
 
     def deliver(self, frame: dict):
@@ -147,7 +150,10 @@ class FleetCoordinator:
 
         def one(jid):
             try:
-                ack = self.send(jid, DrainCommand(job_id=jid))
+                kind = getattr(self.registry.get(jid), "kind", "train")
+                ack = self.send(jid, DrainCommand(
+                    job_id=jid,
+                    boundary="decode" if kind == "serve" else "step"))
                 if isinstance(ack, DrainAck):
                     acks[jid] = ack.step
                     self.registry.mark(jid, "drained")

@@ -43,6 +43,7 @@ class Heartbeat(WireRecord):
     job_id: str
     step: int
     sent_at: float
+    sessions: int = 0      # live serving sessions (0 for trainers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,7 @@ class DrainCommand(WireRecord):
     """
     job_id: str
     reason: str = "preemption_wave"
+    boundary: str = "step"      # "step" (trainer) | "decode" (serving)
 
 
 @dataclasses.dataclass(frozen=True)

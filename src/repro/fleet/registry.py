@@ -33,6 +33,7 @@ class JobRecord:
     config_wire: dict
     host: str | None = None
     topology: dict | None = None
+    kind: str = "train"               # workload: "train" | "serve"
     phase: str = "registered"
     step: int = 0
     image_id: str | None = None
@@ -62,7 +63,8 @@ class JobRegistry:
     # ----------------------------------------------------------- lifecycle
     def register(self, job_id: str, config_wire: dict, *,
                  host: str | None = None,
-                 topology: dict | None = None) -> JobRecord:
+                 topology: dict | None = None,
+                 kind: str = "train") -> JobRecord:
         if not isinstance(config_wire, dict):
             raise TypeError("JobRegistry.register takes the config as "
                             "WIRE DATA (SessionConfig.to_wire()), got "
@@ -71,7 +73,8 @@ class JobRegistry:
             if job_id in self._jobs:
                 raise ValueError(f"job {job_id!r} already registered")
             rec = JobRecord(job_id=job_id, config_wire=dict(config_wire),
-                            host=host, topology=topology, phase="running",
+                            host=host, topology=topology, kind=kind,
+                            phase="running",
                             last_heartbeat=self.clock())
             self._jobs[job_id] = rec
             return rec

@@ -87,6 +87,96 @@ class SimJob:
         self.running = True
 
 
+class SimServeJob:
+    """A live serving plane as a fleet job: a tiny real model behind a
+    SessionManager, fed by a seeded TrafficGenerator. The coordinator
+    wave-migrates it like any trainer — drain pauses at a DECODE
+    boundary, the dump carries the serve-plane side-table as meta, and
+    ``adopt`` rebuilds the plane (zero dropped sessions) from the
+    RestoreResult alone.
+
+    Example::
+
+        j = SimServeJob("s0", seed=3)
+        j.run(4)
+        assert j.mgr.stats["admitted"] > 0
+    """
+
+    kind = "serve"
+
+    def __init__(self, job_id: str, *, seed: int = 0,
+                 arch: str = "gemma2-2b", slots: int = 4,
+                 page_len: int = 24, rate: float = 2.0):
+        from repro.serving import SessionManager, TrafficGenerator
+        self.job_id = job_id
+        self.seed = int(seed)
+        self.arch = arch
+        self.lm = self._lm(arch)
+        params = self.lm.init(_jax().random.PRNGKey(self.seed))
+        self.mgr = SessionManager(self.lm, params, slots=slots,
+                                  page_len=page_len)
+        self.traffic = TrafficGenerator(
+            seed=self.seed, vocab_size=self.lm.cfg.vocab_size, rate=rate,
+            prompt_support=(4, 6), target_max=6)
+        self.running = True
+        self.paused = False
+
+    @staticmethod
+    def _lm(arch: str):
+        from repro import configs
+        from repro.models.model import LM
+        return LM(configs.get_tiny(arch))
+
+    @property
+    def step(self) -> int:
+        return self.mgr.clock
+
+    def run(self, steps: int = 1):
+        if not self.running or self.paused:
+            return
+        self.mgr.draining = False
+        self.mgr.run(steps, traffic=self.traffic)
+
+    def drain(self) -> int:
+        self.paused = True
+        return self.mgr.drain()
+
+    def state(self) -> dict:
+        return _jax().device_get(self.mgr.plane_state())
+
+    def meta(self) -> dict:
+        """What rides the wire-dump as meta: the serve-plane side-table
+        plus the activity-ranked lazy prefetch hint."""
+        return {"serve_plane": self.mgr.serve_table(self.traffic.state()),
+                "prefetch_hint": self.mgr.prefetch_hint()}
+
+    def sessions_live(self) -> int:
+        return len(self.mgr.live_sids())
+
+    def adopt(self, res):
+        """Become the restored incarnation: rebuild the plane and
+        fast-forward a fresh traffic stream to the dumped cursor."""
+        from repro.serving import SessionManager, TrafficGenerator
+        meta = res.manifest["meta"]
+        table = meta.get("serve_plane") \
+            or (meta.get("extra") or {}).get("serve_plane")
+        self.mgr = SessionManager.adopt(self.lm, res.state, table)
+        cur = (table.get("traffic") or {})
+        self.traffic = TrafficGenerator(
+            seed=cur.get("seed", self.seed),
+            vocab_size=self.lm.cfg.vocab_size,
+            rate=cur.get("rate", 2.0),
+            prompt_support=(4, 6), target_max=6)
+        self.traffic.fast_forward(cur.get("emitted", 0))
+        self.paused = False
+        self.running = True
+
+
+def _jax():
+    import jax
+    return jax
+
+
 class SimCluster:
     """Hosts + jobs + coordinator, wired through loopback transports.
 
@@ -183,7 +273,25 @@ class SimCluster:
             ids.append(job_id)
         return ids
 
-    def _attach(self, job: SimJob, host: str):
+    def submit_serve_jobs(self, n: int, *, ticks: int = 2,
+                          slots: int = 4, page_len: int = 24,
+                          rate: float = 2.0) -> list:
+        """Admit ``n`` serving planes (SimServeJob) — the coordinator
+        sees them as kind="serve" and drains them at decode
+        boundaries."""
+        ids = []
+        for _ in range(int(n)):
+            job_id = f"j{len(self.jobs)}"
+            host = self.least_loaded_host()
+            job = SimServeJob(job_id,
+                              seed=self.seed * 1000 + len(self.jobs),
+                              slots=slots, page_len=page_len, rate=rate)
+            job.run(ticks)
+            self._attach(job, host)
+            ids.append(job_id)
+        return ids
+
+    def _attach(self, job, host: str):
         cfg = self._config(job.job_id, host)
         client = self._client(job, cfg.to_wire(), host)
         transport = LoopbackTransport(client, host=host,
@@ -192,21 +300,31 @@ class SimCluster:
         self.clients[job.job_id] = client
         self.all_transports.append(transport)
         self.coordinator.attach(job.job_id, transport, host=host,
-                                config_wire=cfg.to_wire())
+                                config_wire=cfg.to_wire(),
+                                kind=getattr(job, "kind", "train"))
 
-    def _client(self, job: SimJob, config_wire: dict,
+    def _client(self, job, config_wire: dict,
                 host: str) -> FleetClient:
+        serve = getattr(job, "kind", "train") == "serve"
+
         def drain():
+            if serve:
+                return job.drain()
             job.paused = True
             return job.step
 
         def restored(res):
-            job.adopt(res.state, res.step)
+            if serve:
+                job.adopt(res)
+            else:
+                job.adopt(res.state, res.step)
 
         return FleetClient(
             job.job_id, config_wire, host=host,
             state_provider=lambda: (job.state(), job.step),
-            on_drain=drain, on_restore=restored)
+            on_drain=drain, on_restore=restored,
+            meta_provider=job.meta if serve else None,
+            sessions_provider=job.sessions_live if serve else None)
 
     def spawn(self, rec, host: str, config_wire: dict) -> LoopbackTransport:
         """The coordinator's job launcher: a fresh incarnation of the

@@ -104,3 +104,53 @@ def cache_pspecs(cfg: ModelConfig, rules: dict):
 def cache_bytes(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16) -> int:
     tree = cache_struct(cfg, B, S_max, dtype)
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+# ------------------------------------------------------------- slot pool
+# A cache built with B = n_slots doubles as a POOL of per-session pages:
+# every leaf that carries a "batch" axis is indexed by slot id, so a
+# serving plane can gather an ad-hoc cohort of sessions into a dense
+# decode batch and scatter the updated pages back. The "pos" scalar of
+# the pool is meaningless (each session has its own cursor) — cohorts
+# get their pos injected at gather time.
+
+def slot_axes(cfg: ModelConfig):
+    """Per-leaf index of the "batch" (slot) axis, -1 for leaves without
+    one (the pos scalar). Parallel to init_cache output."""
+    def one(ax):
+        return ax.index("batch") if "batch" in ax else -1
+    return jax.tree.map(one, cache_axes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def slot_take(pool, cfg: ModelConfig, idx, *, pos):
+    """Gather slots ``idx`` ([k] int) out of a pool cache into a dense
+    cohort cache of batch k, with the cohort's ``pos`` cursor set.
+    jit-safe: idx may be a traced array (shapes depend only on len(idx)).
+
+    Example::
+
+        cohort = slot_take(pool, cfg, jnp.array([3, 7]), pos=12)
+    """
+    idx = jnp.asarray(idx)
+
+    def take(a, leaf):
+        return leaf if a < 0 else jnp.take(leaf, idx, axis=a)
+    out = jax.tree.map(take, slot_axes(cfg), pool)
+    out["pos"] = jnp.asarray(pos, jnp.int32)
+    return out
+
+
+def slot_put(pool, cohort, cfg: ModelConfig, idx):
+    """Scatter a cohort cache (batch k) back into pool slots ``idx``.
+    The pool's own ``pos`` scalar is kept (per-session cursors live in
+    the session table, not the pool)."""
+    idx = jnp.asarray(idx)
+
+    def put(a, pleaf, cleaf):
+        if a < 0:
+            return pleaf
+        moved = jnp.moveaxis(pleaf, a, 0).at[idx].set(
+            jnp.moveaxis(cleaf, a, 0))
+        return jnp.moveaxis(moved, 0, a)
+    return jax.tree.map(put, slot_axes(cfg), pool, cohort)

@@ -1,1 +1,3 @@
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.sessions import SessionManager, UserSession  # noqa: F401
+from repro.serving.traffic import Request, TrafficGenerator  # noqa: F401

@@ -17,6 +17,13 @@ latest (or a named) image into a live engine:
     ...
     engine2 = ServeEngine(lm, params, max_len=64)
     engine2.resume_from(sess)            # another machine, same output
+    engine3 = ServeEngine(lm, params, max_len=64)
+    engine3.resume_from(sess, lazy=True)  # post-copy: skeleton first
+
+Generated tokens live in ONE growing [B, cap] buffer appended in place —
+``generated()`` is a zero-copy view and ``session_state()`` is O(tokens),
+not O(tokens²) (the seed engine re-stacked a list of per-token arrays on
+every call, which made long-decode checkpoint loops quadratic).
 """
 from __future__ import annotations
 
@@ -36,7 +43,8 @@ class ServeEngine:
         self.max_len = max_len
         self.compute_dtype = compute_dtype
         self.cache = None
-        self.out_tokens: list = []          # list of [B] np arrays
+        self._gen = np.zeros((0, 0), np.int32)   # [B, cap] token buffer
+        self._n = 0                              # tokens generated so far
         self.prompt_len = 0
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, tokens=t, S_max=max_len,
@@ -46,61 +54,109 @@ class ServeEngine:
                                            compute_dtype=compute_dtype),
             donate_argnums=(1,) if donate_cache else ())
 
+    # -------------------------------------------------------- token buffer
+    def _append(self, tok: np.ndarray):
+        """Append one [B] token column in place (amortized O(1): the
+        buffer doubles when full — never re-stacks history)."""
+        B = tok.shape[0]
+        if self._gen.shape[0] != B:
+            self._gen = np.zeros((B, 8), np.int32)
+            self._n = 0
+        if self._n == self._gen.shape[1]:
+            grown = np.zeros((B, max(8, 2 * self._gen.shape[1])), np.int32)
+            grown[:, :self._n] = self._gen[:, :self._n]
+            self._gen = grown
+        self._gen[:, self._n] = tok
+        self._n += 1
+
+    @property
+    def out_tokens(self) -> list:
+        """Compat view of the seed API: list of [B] per-token arrays.
+        Read-only — mutate through submit()/step()."""
+        return [self._gen[:, i] for i in range(self._n)]
+
     # ------------------------------------------------------------- serving
     def submit(self, prompts: np.ndarray):
         """prompts: [B, S] token ids (uniform length batch)."""
         logits, self.cache = self._prefill(self.params, jnp.asarray(prompts))
         self.prompt_len = prompts.shape[1]
-        self.out_tokens = [np.asarray(jnp.argmax(logits, -1))]
+        self._gen = np.zeros((prompts.shape[0], 8), np.int32)
+        self._n = 0
+        self._append(np.asarray(jnp.argmax(logits, -1)))
 
     def step(self):
-        tok = jnp.asarray(self.out_tokens[-1])[:, None]
+        tok = jnp.asarray(self._gen[:, self._n - 1])[:, None]
         logits, self.cache = self._step(self.params, self.cache, tok)
-        self.out_tokens.append(np.asarray(jnp.argmax(logits, -1)))
+        self._append(np.asarray(jnp.argmax(logits, -1)))
 
     def generate(self, n_tokens: int, *, on_token=None):
-        while len(self.out_tokens) < n_tokens:
+        while self._n < n_tokens:
             self.step()
             if on_token is not None:
                 on_token(self)
         return self.generated()
 
     def generated(self) -> np.ndarray:
-        return np.stack(self.out_tokens, axis=1)      # [B, n]
+        """[B, n] tokens generated so far — a VIEW into the live buffer
+        (no copy; treat as read-only)."""
+        return self._gen[:, :self._n]
 
-    # ---------------------------------------------------------- checkpoint
+    # ----------------------------------------------------------- checkpoint
     def session_state(self):
         """The dumpable pytree: cache + generated tokens."""
         return {"cache": self.cache,
-                "generated": jnp.asarray(self.generated().astype(np.int32)),
+                "generated": jnp.asarray(self.generated()),
                 "prompt_len": jnp.asarray(self.prompt_len, jnp.int32)}
 
     def restore_session(self, state):
         self.cache = state["cache"]
-        gen = np.asarray(state["generated"])
-        self.out_tokens = [gen[:, i] for i in range(gen.shape[1])]
+        gen = np.asarray(state["generated"], np.int32)
+        self._gen = np.ascontiguousarray(gen)     # one copy, no re-split
+        self._n = gen.shape[1]
         self.prompt_len = int(state["prompt_len"])
 
-    # ------------------------------------------------- service façade glue
+    # --------------------------------------------------- service façade glue
     def checkpoint(self, session, *, step: int | None = None,
                    arch: str = "", mode: str = "sync",
                    extra: dict | None = None):
         """Dump the live serving session through a CheckpointSession.
         Returns the DumpReceipt (uncommitted for mode="async"; the
-        committed receipts come from session.wait())."""
-        from repro.api import DumpRequest
-        done = len(self.out_tokens)
-        step = done if step is None else int(step)
-        return session.dump(DumpRequest(
-            state=self.session_state(), step=step,
-            meta=serve_meta(arch=arch, tokens_done=done, extra=extra),
-            mode=mode))
+        committed receipts come from session.wait()). Under a lossless
+        codec policy the meta carries a migration record with the tree
+        digest, so an eager resume verifies bit-identity up front and a
+        lazy resume verifies it when the tree fully materializes."""
+        import jax as _jax
 
-    def resume_from(self, session, *, image_id: str | None = None):
+        from repro.api import DumpRequest
+        done = self._n
+        step = done if step is None else int(step)
+        host = _jax.device_get(self.session_state())
+        meta = serve_meta(arch=arch, tokens_done=done, extra=extra)
+        if getattr(session, "codec_policy", None) is None:
+            from repro.core.dump import flatten_with_paths
+            from repro.core.integrity import tree_digest
+            from repro.core.migration import (MIGRATION_META_KEY,
+                                              MigrationManifest)
+            meta[MIGRATION_META_KEY] = MigrationManifest(
+                step=step, arch=arch or "serve",
+                state_digest=tree_digest(flatten_with_paths(host)),
+                reason="serve_checkpoint").to_meta()
+        return session.dump(DumpRequest(state=host, step=step, meta=meta,
+                                        mode=mode))
+
+    def resume_from(self, session, *, image_id: str | None = None,
+                    lazy: bool = False):
         """Load a dumped serving session (latest image by default) into
         THIS engine — the "restore on another machine" half. Returns the
-        RestoreResult for its manifest/meta."""
+        RestoreResult for its manifest/meta.
+
+        lazy=True is the post-copy path: the image's leaves stream in
+        behind a skeleton (core/lazy.py) and the engine materializes the
+        tree — the full-tree materialize runs the image's deferred digest
+        verification, so a migrated session gets the eager path's
+        bit-identity guarantee the moment every leaf has arrived."""
         from repro.api import RestoreRequest
-        res = session.restore(RestoreRequest(image_id=image_id))
-        self.restore_session(jax.tree.map(jnp.asarray, res.state))
+        res = session.restore(RestoreRequest(image_id=image_id, lazy=lazy))
+        state = res.state.materialize() if lazy else res.state
+        self.restore_session(jax.tree.map(jnp.asarray, state))
         return res

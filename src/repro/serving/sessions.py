@@ -1,0 +1,486 @@
+"""SessionManager: thousands of independent user sessions on one engine.
+
+The batched ``ServeEngine`` serves ONE uniform batch; a live serving
+plane is nothing like that — users arrive on a Poisson process, prompts
+and session lengths are heavy-tailed, and sessions complete and free
+their memory mid-flight. ``SessionManager`` multiplexes that traffic
+over the model's decode path:
+
+  * a shared KV/recurrent-state POOL — one ``models/kvcache.py`` cache
+    built with ``B = slots``; each session owns one slot (its "page"),
+    gathered into dense decode cohorts and scattered back
+    (``slot_take``/``slot_put``);
+  * a session table — decode cursor (``pos``), generated tokens, target
+    length, per-session RNG seed, status — plus a FIFO queue of
+    sessions admitted but not yet prefillled;
+  * admission control by ``kvcache.cache_bytes``: a session only
+    prefills when a slot AND the byte budget are free, so the pool can
+    never overflow mid-prefill (requests that can never fit are
+    rejected up front);
+  * pos-cohort decode: each tick groups active sessions by equal
+    ``pos``, runs one batched decode per cohort, and samples each
+    session's next token from its private seeded stream — the cohort
+    composition is a pure function of the session table, so a migrated
+    plane re-forms the same cohorts and continues bit-identically.
+
+The WHOLE plane is one pytree (params + pool + per-session leaves) and
+one JSON side-table (``serve_meta``'s ``serve_plane``), dumped through
+the ``CheckpointSession`` façade. Restore comes in two modes:
+
+  eager  ``SessionManager.restore_from(sess, lm)`` — full materialize,
+         every in-flight session continues greedily bit-identical to
+         the uninterrupted run (zero drops);
+  lazy   ``restore_from(sess, lm, lazy=True)`` — autoscale-from-image:
+         params materialize first (the dump records a
+         ``prefetch_hint`` ranking leaves by session activity), the
+         pool starts as a fresh skeleton, and NEW sessions get their
+         first token while the old sessions' pages are still in
+         flight; ``complete_restore()`` lands the old pages, flips
+         "restoring" sessions back to "active", and runs the image's
+         deferred whole-tree digest verification.
+
+Example::
+
+    mgr = SessionManager(lm, params, slots=8, page_len=32)
+    for req in traffic.due(mgr.clock):
+        mgr.submit(req)
+    mgr.step()                                  # one decode tick
+    receipt = mgr.checkpoint(sess, traffic=traffic.state())
+    mgr2 = SessionManager.restore_from(sess, lm)    # another replica
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import serve_meta
+from repro.models import kvcache
+from repro.models.model import LM
+from repro.serving.traffic import Request
+
+
+@dataclasses.dataclass
+class UserSession:
+    """One user's decode stream: everything needed to continue it on any
+    replica. ``generated`` is a plain int list (appended per token);
+    ``pos`` is the session's private KV cursor — the pool has no global
+    one.
+
+    Example::
+
+        s = UserSession(sid="s0", prompt=np.array([1, 2]), target=4,
+                        rng_seed=9, arrival=0.0)
+    """
+    sid: str
+    prompt: np.ndarray | None
+    target: int
+    rng_seed: int
+    arrival: float
+    status: str = "queued"     # queued|active|restoring|done|rejected
+    slot: int | None = None
+    pos: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    first_token_wall: float | None = None   # time.perf_counter() stamp
+
+    @property
+    def n(self) -> int:
+        return len(self.generated)
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.generated, np.int32)
+
+
+class SessionManager:
+    """Continuous-admission serving plane over one model.
+
+    ``pool_bytes`` caps the pool's LIVE bytes below its allocated size
+    (admission control for oversubscribed replicas); None means the
+    full ``slots * cache_bytes(cfg, 1, page_len)`` budget.
+
+    Example::
+
+        mgr = SessionManager(lm, params, slots=4, page_len=24)
+        mgr.submit(Request("s0", 0.0, np.array([3, 1, 4]), 2, 7))
+        mgr.step()
+        assert mgr.sessions["s0"].n >= 1
+    """
+
+    def __init__(self, lm: LM, params, *, slots: int, page_len: int,
+                 pool_bytes: int | None = None,
+                 compute_dtype=jnp.bfloat16, temperature: float = 0.0):
+        self.lm, self.cfg = lm, lm.cfg
+        self.params = params
+        self.slots, self.page_len = int(slots), int(page_len)
+        self.compute_dtype = compute_dtype
+        self.temperature = float(temperature)
+        self.pool = kvcache.init_cache(self.cfg, self.slots, self.page_len,
+                                       dtype=compute_dtype)
+        self.slot_bytes = kvcache.cache_bytes(self.cfg, 1, self.page_len,
+                                              compute_dtype)
+        self.pool_bytes = int(pool_bytes) if pool_bytes else \
+            self.slots * self.slot_bytes
+        self.free: list = list(range(self.slots))   # min-heap of slot ids
+        heapq.heapify(self.free)
+        self.sessions: dict = {}                    # sid -> UserSession
+        self.queue: list = []                       # sids awaiting prefill
+        self.clock = 0                              # decode ticks
+        self.draining = False
+        self.stats = {"admitted": 0, "completed": 0, "rejected": 0,
+                      "queued_peak": 0, "decode_batches": 0,
+                      "prefills": 0}
+        self._lazy = None          # (LazyState, table) while post-copying
+        # compiled paths are cached ON THE MODEL keyed by plane geometry:
+        # a replica adopting an image re-uses the warm XLA executables
+        # instead of recompiling — restore latency is transfer, not XLA
+        cfg, dt = self.cfg, compute_dtype
+        jits = lm.__dict__.setdefault("_serve_jit_cache", {})
+        key = (self.slots, self.page_len, str(dt))
+        if key not in jits:
+            page_len = self.page_len
+
+            def decode(params, pool, idx, pos, tokens):
+                cohort = kvcache.slot_take(pool, cfg, idx, pos=pos)
+                logits, new = lm.decode_step(params, cohort, tokens,
+                                             compute_dtype=dt)
+                return logits, kvcache.slot_put(pool, new, cfg, idx)
+            jits[key] = {
+                "prefill": jax.jit(
+                    lambda p, t: lm.prefill(p, tokens=t, S_max=page_len,
+                                            compute_dtype=dt)),
+                "decode": jax.jit(decode),
+                "insert": jax.jit(
+                    lambda pool, c, slot: kvcache.slot_put(pool, c, cfg,
+                                                           slot)),
+            }
+        self._prefill_j = jits[key]["prefill"]
+        self._decode_j = jits[key]["decode"]
+        self._insert_j = jits[key]["insert"]
+
+    # ----------------------------------------------------------- admission
+    @property
+    def used_slots(self) -> int:
+        return self.slots - len(self.free)
+
+    @property
+    def live_bytes(self) -> int:
+        return self.used_slots * self.slot_bytes
+
+    def submit(self, req: Request):
+        """Queue one request. Rejects (permanently) a request whose
+        prompt + target can never fit a page; everything else waits for
+        a slot + byte budget — allocation cannot fail mid-prefill."""
+        if req.sid in self.sessions:
+            raise ValueError(f"session {req.sid!r} already submitted")
+        s = UserSession(sid=req.sid, prompt=np.asarray(req.prompt, np.int32),
+                        target=int(req.target), rng_seed=int(req.rng_seed),
+                        arrival=float(req.arrival))
+        if len(req.prompt) + int(req.target) > self.page_len:
+            s.status = "rejected"
+            self.sessions[req.sid] = s
+            self.stats["rejected"] += 1
+            return s
+        self.sessions[req.sid] = s
+        self.queue.append(req.sid)
+        self.stats["queued_peak"] = max(self.stats["queued_peak"],
+                                        len(self.queue))
+        self._admit()
+        return s
+
+    def _admit(self):
+        while self.queue and self.free and not self.draining:
+            if self.live_bytes + self.slot_bytes > self.pool_bytes:
+                return                       # byte budget: wait for a free
+            sid = self.queue.pop(0)
+            self._start(self.sessions[sid])
+
+    def _start(self, s: UserSession):
+        s.slot = heapq.heappop(self.free)
+        prompt = self._prompt_of(s)
+        logits, cache = self._prefill_j(self.params, prompt[None, :])
+        self.pool = self._insert_j(self.pool, cache,
+                                   jnp.asarray([s.slot], jnp.int32))
+        s.pos = int(prompt.shape[0])
+        s.status = "active"
+        self.stats["admitted"] += 1
+        self.stats["prefills"] += 1
+        self._emit(s, np.asarray(logits)[0])
+
+    def _prompt_of(self, s: UserSession) -> np.ndarray:
+        if s.prompt is None and self._lazy is not None:
+            lstate, _ = self._lazy      # fault exactly this leaf in
+            s.prompt = np.asarray(lstate["sessions"][s.sid]["prompt"],
+                                  np.int32)
+        return s.prompt
+
+    # -------------------------------------------------------------- decode
+    def _next_token(self, s: UserSession, logits: np.ndarray) -> int:
+        logits = np.asarray(logits, np.float32)
+        if self.temperature <= 0.0:
+            return int(logits.argmax())
+        # the session's stream depends only on (rng_seed, n): sampling
+        # survives migration exactly like greedy does
+        r = np.random.default_rng((s.rng_seed, s.n))
+        z = (logits / self.temperature).astype(np.float64)
+        p = np.exp(z - z.max())
+        return int(r.choice(logits.shape[0], p=p / p.sum()))
+
+    def _emit(self, s: UserSession, logits: np.ndarray):
+        s.generated.append(self._next_token(s, logits))
+        if s.first_token_wall is None:
+            s.first_token_wall = time.perf_counter()
+        if s.n >= s.target:
+            self._complete(s)
+
+    def _complete(self, s: UserSession):
+        heapq.heappush(self.free, s.slot)
+        s.slot = None
+        s.status = "done"
+        self.stats["completed"] += 1
+
+    def step(self):
+        """One decode tick: admit what fits, then one batched decode per
+        pos-cohort (active sessions grouped by equal cursor, ordered by
+        slot — a deterministic function of the table, so cohorts re-form
+        identically after migration)."""
+        if self.draining:
+            return
+        self._admit()
+        by_pos: dict = {}
+        for s in self.sessions.values():
+            if s.status == "active":
+                by_pos.setdefault(s.pos, []).append(s)
+        for pos in sorted(by_pos):
+            group = sorted(by_pos[pos], key=lambda s: s.slot)
+            idx = jnp.asarray([s.slot for s in group], jnp.int32)
+            toks = jnp.asarray([[s.generated[-1]] for s in group],
+                               jnp.int32)
+            logits, self.pool = self._decode_j(
+                self.params, self.pool, idx,
+                jnp.asarray(pos, jnp.int32), toks)
+            logits = np.asarray(logits)
+            self.stats["decode_batches"] += 1
+            for i, s in enumerate(group):
+                s.pos += 1
+                self._emit(s, logits[i])
+        self.clock += 1
+        self._admit()
+
+    def run(self, ticks: int, *, traffic=None):
+        """Drive ``ticks`` decode steps, feeding ``traffic`` (a
+        TrafficGenerator) by the virtual clock when given."""
+        for _ in range(int(ticks)):
+            if traffic is not None:
+                for req in traffic.due(float(self.clock)):
+                    self.submit(req)
+            self.step()
+
+    def drain(self) -> int:
+        """Pause the plane at the decode-step boundary (step()/submit()
+        keep queueing but stop computing). The manager only mutates
+        state inside step(), so the boundary is wherever the last tick
+        left it — drain is a flag, exactly like the trainer's
+        preemption handler. Returns the paused clock."""
+        self.draining = True
+        return self.clock
+
+    # ------------------------------------------------------------ accounts
+    @property
+    def tokens_done(self) -> int:
+        return sum(s.n for s in self.sessions.values())
+
+    def live_sids(self) -> list:
+        """Sessions the plane still owes tokens (dump must carry)."""
+        return [sid for sid, s in self.sessions.items()
+                if s.status in ("queued", "active", "restoring")]
+
+    # ---------------------------------------------------------- checkpoint
+    def plane_state(self) -> dict:
+        """The dumpable pytree: params + pool + per-session leaves.
+        Finished/rejected sessions carry no leaves (their history lives
+        with the replica that served them)."""
+        out = {"params": self.params, "pool": self.pool, "sessions": {}}
+        for sid in self.live_sids():
+            s = self.sessions[sid]
+            leaf = {"prompt": np.asarray(self._prompt_of(s), np.int32)}
+            if s.n:
+                leaf["generated"] = s.output()
+            out["sessions"][sid] = leaf
+        return out
+
+    def serve_table(self, traffic: dict | None = None) -> dict:
+        """The JSON side-table: session cursors + queue + clock — the
+        part of the plane that is bookkeeping, not arrays."""
+        return {
+            "version": 1, "clock": int(self.clock),
+            "slots": self.slots, "page_len": self.page_len,
+            "pool_bytes": self.pool_bytes,
+            "temperature": self.temperature,
+            "sessions": {sid: {
+                "slot": self.sessions[sid].slot,
+                "pos": int(self.sessions[sid].pos),
+                "n": int(self.sessions[sid].n),
+                "target": int(self.sessions[sid].target),
+                "rng_seed": int(self.sessions[sid].rng_seed),
+                "arrival": float(self.sessions[sid].arrival),
+                "status": self.sessions[sid].status,
+            } for sid in self.live_sids()},
+            "queue": list(self.queue),
+            "completed": [sid for sid, s in self.sessions.items()
+                          if s.status == "done"],
+            "traffic": traffic,
+        }
+
+    def prefetch_hint(self) -> list:
+        """Activity-ranked streaming order for lazy restore: params
+        first (any new request needs them for TTFT), then the sessions
+        closest to finishing (they free slots soonest), then the pool's
+        bulk pages."""
+        active = sorted(
+            (s for s in self.sessions.values() if s.status == "active"),
+            key=lambda s: (s.target - s.n, s.sid))
+        return (["params"] + [f"sessions/{s.sid}" for s in active]
+                + ["pool"])
+
+    def checkpoint(self, session, *, step: int | None = None,
+                   mode: str = "sync", traffic: dict | None = None,
+                   extra: dict | None = None):
+        """Dump the whole plane through a CheckpointSession. Under a
+        lossless codec policy the dump carries a migration record with
+        the tree digest, so eager restores verify bit-identity up front
+        and lazy restores verify it on full materialization. ``step``
+        defaults to the decode clock — tick between dumps (or pass an
+        explicit step) so image ids stay unique."""
+        host = jax.device_get(self.plane_state())
+        meta = serve_meta(arch=self.cfg.name, tokens_done=self.tokens_done,
+                          sessions=len(self.live_sids()),
+                          queue_depth=len(self.queue), extra=extra)
+        meta["serve_plane"] = self.serve_table(traffic)
+        meta["prefetch_hint"] = self.prefetch_hint()
+        if getattr(session, "codec_policy", None) is None:
+            from repro.core.dump import flatten_with_paths
+            from repro.core.integrity import tree_digest
+            from repro.core.migration import (MIGRATION_META_KEY,
+                                              MigrationManifest)
+            meta[MIGRATION_META_KEY] = MigrationManifest(
+                step=int(self.clock if step is None else step),
+                arch=self.cfg.name,
+                state_digest=tree_digest(flatten_with_paths(host)),
+                reason="serve_checkpoint").to_meta()
+        from repro.api import DumpRequest
+        return session.dump(DumpRequest(
+            state=host, step=int(self.clock if step is None else step),
+            meta=meta, mode=mode))
+
+    # -------------------------------------------------------------- restore
+    @classmethod
+    def restore_from(cls, session, lm: LM, *, image_id: str | None = None,
+                     lazy: bool = False, compute_dtype=jnp.bfloat16):
+        """Rebuild a plane from a serving image on THIS replica.
+
+        eager: every leaf lands before the plane exists; in-flight
+        sessions are active immediately and continue bit-identically.
+
+        lazy: params stream first (the image's ``prefetch_hint``); the
+        pool starts as a zeroed skeleton and dumped-active sessions are
+        held in "restoring" while their pages arrive — new requests
+        prefill into genuinely-free slots right away. Call
+        ``complete_restore()`` before old sessions decode again."""
+        from repro.api import RestoreRequest
+        res = session.restore(RestoreRequest(image_id=image_id, lazy=lazy))
+        table = res.manifest["meta"]["serve_plane"]
+        if not lazy:
+            return cls.adopt(lm, res.state, table,
+                             compute_dtype=compute_dtype), res
+        params = jax.tree.map(jnp.asarray,
+                              res.state["params"].materialize())
+        mgr = cls._shell(lm, params, table, compute_dtype)
+        mgr._load_table(table, sessions_state=None, lazy=True)
+        mgr._lazy = (res.state, table)
+        return mgr, res
+
+    @classmethod
+    def adopt(cls, lm: LM, state, table: dict, *,
+              compute_dtype=jnp.bfloat16):
+        """Eagerly become the plane described by a restored (state,
+        side-table) pair — the fleet client's on_restore hook, and the
+        eager half of restore_from().
+
+        Example::
+
+            mgr = SessionManager.adopt(lm, res.state,
+                res.manifest["meta"]["serve_plane"])
+        """
+        state = jax.tree.map(jnp.asarray, state)
+        mgr = cls._shell(lm, state["params"], table, compute_dtype)
+        mgr.pool = state["pool"]
+        mgr._load_table(table, sessions_state=state.get("sessions", {}),
+                        lazy=False)
+        return mgr
+
+    @classmethod
+    def _shell(cls, lm, params, table, compute_dtype):
+        mgr = cls(lm, params, slots=table["slots"],
+                  page_len=table["page_len"],
+                  pool_bytes=table.get("pool_bytes"),
+                  compute_dtype=compute_dtype,
+                  temperature=table.get("temperature", 0.0))
+        mgr.clock = int(table["clock"])
+        return mgr
+
+    def _load_table(self, table: dict, *, sessions_state, lazy: bool):
+        for sid, rec in table["sessions"].items():
+            s = UserSession(
+                sid=sid, prompt=None, target=int(rec["target"]),
+                rng_seed=int(rec["rng_seed"]),
+                arrival=float(rec["arrival"]), status=rec["status"],
+                slot=rec["slot"], pos=int(rec["pos"]))
+            if sessions_state is not None and sid in sessions_state:
+                leaf = sessions_state[sid]
+                s.prompt = np.asarray(leaf["prompt"], np.int32)
+                if "generated" in leaf:
+                    s.generated = [int(t) for t in np.asarray(
+                        leaf["generated"]).ravel()]
+            if s.slot is not None:
+                self.free.remove(s.slot)
+                if lazy and s.status == "active":
+                    s.status = "restoring"   # page not here yet
+            self.sessions[sid] = s
+        heapq.heapify(self.free)
+        self.queue = list(table["queue"])
+        for sid in table.get("completed", []):
+            self.sessions.setdefault(sid, UserSession(
+                sid=sid, prompt=None, target=0, rng_seed=0, arrival=0.0,
+                status="done"))
+
+    def complete_restore(self):
+        """Finish a lazy restore: land the dumped pool pages for every
+        "restoring" session, rebuild their token history, and run the
+        image's deferred whole-tree digest verification (the root
+        materialize). Idempotent; no-op on an eager plane."""
+        if self._lazy is None:
+            return
+        lstate, table = self._lazy
+        restoring = [s for s in self.sessions.values()
+                     if s.status == "restoring"]
+        if restoring:
+            pool_img = jax.tree.map(jnp.asarray,
+                                    lstate["pool"].materialize())
+            idx = jnp.asarray(sorted(s.slot for s in restoring), jnp.int32)
+            page = kvcache.slot_take(pool_img, self.cfg, idx, pos=0)
+            self.pool = kvcache.slot_put(self.pool, page, self.cfg, idx)
+        sess_img = lstate["sessions"].materialize() \
+            if "sessions" in lstate else {}
+        for s in restoring:
+            leaf = sess_img[s.sid]
+            s.prompt = np.asarray(leaf["prompt"], np.int32)
+            if "generated" in leaf:
+                s.generated = [int(t) for t in np.asarray(
+                    leaf["generated"]).ravel()]
+            s.status = "active"
+        lstate.materialize()        # root: deferred digest verification
+        self._lazy = None

@@ -203,8 +203,10 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     # pre-copy / post-copy mechanisms (pre-dump, lazy-pages); 13 with the
     # migration path's practical bottleneck — remote image transfer; 14
     # with the dump path's hot loop — device-side fused encode+digest;
-    # 15 with DMTCP's territory — a coordinator over many jobs
-    assert sorted(api.TABLE1) == list(range(1, 16))
+    # 15 with DMTCP's territory — a coordinator over many jobs; 16 with
+    # the serving plane: row 8's "network applications" scenario at
+    # multi-session scale, migratable because the state is abstract
+    assert sorted(api.TABLE1) == list(range(1, 17))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
@@ -213,3 +215,4 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     assert api.TABLE1[13][2] == "remote_storage"
     assert api.TABLE1[14][2] == "device_codec"
     assert api.TABLE1[15][2] == "fleet_coordination"
+    assert api.TABLE1[16][2] == "live_serving"

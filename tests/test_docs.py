@@ -129,7 +129,14 @@ def test_docs_mention_the_new_knobs():
                  "preemption_wave", "dump_concurrency", "stagger",
                  "heartbeat_timeout_s", "front=", "WIRE_SCHEMA_VERSION",
                  "HostDownError", "restore_job", "replace_lost",
-                 "check_heartbeats", "ErrorReply"):
+                 "check_heartbeats", "ErrorReply",
+                 # live serving plane (ISSUE 8): the SessionManager
+                 # surface, the drain/restore contract, and the lazy
+                 # autoscale knobs
+                 "SessionManager", "TrafficGenerator", "pool_bytes",
+                 "page_len", "complete_restore", "prefetch_hint",
+                 'boundary="decode"', '"restoring"', "bench-serve",
+                 "serve_migration"):
         assert knob in guide, f"operator guide lost mention of {knob!r}"
     readme = (ROOT / "README.md").read_text()
     assert 'mode="pre_dump"' in readme and "lazy=True" in readme

@@ -1,0 +1,424 @@
+"""Live serving plane: multi-session migration, lazy autoscale, admission.
+
+The SessionManager multiplexes Poisson traffic over one model via a
+shared KV slot pool; the whole plane (params + pool + session leaves +
+side-table) dumps through the CheckpointSession façade and restores
+eagerly (bit-identical, zero drops) or lazily (params-first
+autoscale-from-image). These tests pin the guarantees the
+serve_migration benchmark gates, at CI size, plus the failure paths the
+benchmark never walks (fault-injected dumps, byte-budget admission,
+oversized rejects)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import kvcache
+from repro.models.model import LM
+from repro.serving import Request, SessionManager, ServeEngine, \
+    TrafficGenerator
+
+SLOTS, PAGE = 4, 16     # one geometry -> the per-LM jit cache stays warm
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    import jax
+    lm = LM(configs.get_tiny("gemma2-2b"))
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _traffic(vocab, *, seed=7, rate=2.0):
+    # single prompt length: one prefill compile per module
+    return TrafficGenerator(seed=seed, vocab_size=vocab, rate=rate,
+                            prompt_support=(4,), target_max=6)
+
+
+def _outputs(mgr):
+    return {sid: s.output().tolist() for sid, s in mgr.sessions.items()
+            if s.status != "rejected"}
+
+
+# ------------------------------------------------------------------ traffic
+def test_traffic_stream_is_seeded_and_replayable():
+    a = TrafficGenerator(seed=3, vocab_size=100, rate=2.0)
+    b = TrafficGenerator(seed=3, vocab_size=100, rate=2.0)
+    ra, rb = a.take(10), b.take(10)
+    assert [r.sid for r in ra] == [r.sid for r in rb]
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(ra, rb))
+    assert [r.target for r in ra] == [r.target for r in rb]
+    # fast_forward on a FRESH generator replays the continuation exactly
+    c = TrafficGenerator(seed=3, vocab_size=100, rate=2.0)
+    c.fast_forward(6)
+    assert c.emitted == 6
+    tail = c.take(4)
+    assert [r.sid for r in tail] == [r.sid for r in ra[6:]]
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(tail, ra[6:]))
+    with pytest.raises(RuntimeError):
+        a.fast_forward(2)               # only valid before any draw
+    st = a.state()
+    assert st["seed"] == 3 and st["emitted"] == 10
+
+
+def test_traffic_shapes_are_heavy_tailed_but_bounded():
+    g = TrafficGenerator(seed=5, vocab_size=64, rate=3.0,
+                         prompt_support=(4, 6, 8), target_max=12)
+    reqs = g.take(50)
+    arrivals = [r.arrival for r in reqs]
+    assert arrivals == sorted(arrivals)             # Poisson: monotone
+    assert {len(r.prompt) for r in reqs} <= {4, 6, 8}
+    assert all(1 <= r.target <= 12 for r in reqs)
+    assert all(0 <= int(r.prompt.max()) < 64 for r in reqs)
+    # heavy tail actually produces spread, not a constant
+    assert len({r.target for r in reqs}) > 1
+
+
+# ---------------------------------------------------------------- admission
+def test_byte_budget_admission_control(lm_params):
+    """pool_bytes below the full pool caps CONCURRENT sessions without
+    rejecting anyone: the rest wait queued and run as slots free."""
+    lm, params = lm_params
+    slot_bytes = kvcache.cache_bytes(lm.cfg, 1, PAGE, jnp.bfloat16)
+    mgr = SessionManager(lm, params, slots=SLOTS, page_len=PAGE,
+                         pool_bytes=2 * slot_bytes)
+    reqs = _traffic(lm.cfg.vocab_size).take(5)
+    for r in reqs:
+        mgr.submit(r)
+    assert mgr.used_slots <= 2 and mgr.queue      # budget, not slots, binds
+    peak = 0
+    for _ in range(40):
+        mgr.step()
+        peak = max(peak, mgr.used_slots)
+        if all(mgr.sessions[r.sid].status == "done" for r in reqs):
+            break
+    assert peak <= 2
+    assert all(mgr.sessions[r.sid].status == "done" for r in reqs)
+    assert mgr.stats["rejected"] == 0
+    assert mgr.live_bytes == 0
+
+
+def test_oversized_request_rejected_up_front(lm_params):
+    lm, params = lm_params
+    mgr = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    s = mgr.submit(Request("big", 0.0, np.zeros(12, np.int32), 8, 1))
+    assert s.status == "rejected"                 # 12 + 8 > PAGE, forever
+    assert "big" not in mgr.queue and s.slot is None
+    assert mgr.stats["rejected"] == 1
+    mgr.step()                                    # and it never resurrects
+    assert mgr.sessions["big"].n == 0
+
+
+def test_duplicate_sid_is_an_error(lm_params):
+    lm, params = lm_params
+    mgr = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    mgr.submit(Request("s", 0.0, np.zeros(4, np.int32), 2, 1))
+    with pytest.raises(ValueError, match="already submitted"):
+        mgr.submit(Request("s", 1.0, np.zeros(4, np.int32), 2, 1))
+
+
+# ---------------------------------------------------------------- migration
+def test_eager_migration_zero_drop_bit_identical(lm_params):
+    """Dump mid-flight, adopt on a 'new machine': every in-flight session
+    and every post-cut admission continues bit-identically."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+    vocab = lm.cfg.vocab_size
+    WARM, POST = 5, 10
+
+    ref = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    ref.run(WARM + POST, traffic=_traffic(vocab))
+    o_ref = _outputs(ref)
+
+    src = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    gen = _traffic(vocab)
+    src.run(WARM, traffic=gen)
+    src.drain()
+    with CheckpointSession("mem://serve-plane-eager") as sess:
+        src.checkpoint(sess, traffic=gen.state())
+        in_flight = set(src.live_sids())
+        assert in_flight                           # dump caught real work
+
+        mgr, res = SessionManager.restore_from(sess, lm)
+    assert res.digest_verified is True             # lossless => verified
+    assert in_flight <= set(mgr.sessions)          # zero drops
+    assert mgr.clock == src.clock
+    gen2 = _traffic(vocab)
+    gen2.fast_forward(
+        res.manifest["meta"]["serve_plane"]["traffic"]["emitted"])
+    mgr.run(POST, traffic=gen2)
+    done_before = set(
+        res.manifest["meta"]["serve_plane"].get("completed", []))
+    o_mig = _outputs(mgr)
+    check = in_flight | {sid for sid in o_mig if sid not in done_before}
+    assert check and all(o_ref.get(sid) == o_mig.get(sid)
+                         for sid in check), \
+        [sid for sid in sorted(check) if o_ref.get(sid) != o_mig.get(sid)]
+
+
+def test_lazy_autoscale_serves_new_before_old_pages_land(lm_params):
+    """Autoscale-from-image: a lazy replica admits NEW sessions while the
+    dumped sessions sit in 'restoring'; complete_restore() lands their
+    pages, runs the deferred digest check, and the old sessions continue
+    bit-identically."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+    vocab = lm.cfg.vocab_size
+    WARM, POST = 4, 12          # rate/warm chosen so the dump catches a
+    RATE = 1.5                  # restoring session AND a genuinely free slot
+
+    ref = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    ref.run(WARM + POST, traffic=_traffic(vocab, rate=RATE))
+    o_ref = _outputs(ref)
+
+    src = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    gen = _traffic(vocab, rate=RATE)
+    src.run(WARM, traffic=gen)
+    src.drain()
+    with CheckpointSession("mem://serve-plane-lazy") as sess:
+        src.checkpoint(sess, traffic=gen.state())
+        in_flight = set(src.live_sids())
+
+        mgr, res = SessionManager.restore_from(sess, lm, lazy=True)
+        assert res.lazy and mgr._lazy is not None
+        held = [s for s in mgr.sessions.values() if s.status == "restoring"]
+        assert held                                 # old pages not here yet
+        assert all(s.slot is not None for s in held)
+
+        # a brand-new user gets tokens BEFORE the old pages arrive
+        nov = mgr.submit(Request("nov0", float(mgr.clock),
+                                 np.zeros(4, np.int32), 3, 99))
+        assert nov.status == "active" and nov.n >= 1
+        assert all(s.status == "restoring" for s in held)
+
+        mgr.complete_restore()
+        assert mgr._lazy is None
+        assert all(s.status == "active" or s.status == "done"
+                   for s in held)
+        mgr.complete_restore()                      # idempotent
+
+        gen2 = _traffic(vocab, rate=RATE)
+        gen2.fast_forward(
+            res.manifest["meta"]["serve_plane"]["traffic"]["emitted"])
+        mgr.run(POST, traffic=gen2)
+    o_mig = _outputs(mgr)
+    assert in_flight <= set(mgr.sessions)
+    bad = [sid for sid in sorted(in_flight)
+           if o_ref.get(sid) != o_mig.get(sid)]
+    assert not bad, f"lazy continuations diverged: {bad}"
+    assert mgr.sessions["nov0"].status == "done"
+
+
+def test_restoring_sessions_hold_their_slots(lm_params):
+    """The free list on a lazy replica excludes every dumped-active slot:
+    new admissions can never prefill over a page still in flight."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+    src = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    gen = _traffic(lm.cfg.vocab_size, rate=5.0)
+    src.run(3, traffic=gen)
+    src.drain()
+    with CheckpointSession("mem://serve-plane-slots") as sess:
+        src.checkpoint(sess, traffic=gen.state())
+        mgr, _res = SessionManager.restore_from(sess, lm, lazy=True)
+        held = {s.slot for s in mgr.sessions.values()
+                if s.status == "restoring"}
+        assert held and not held & set(mgr.free)    # disjoint partition:
+        assert len(held) + len(mgr.free) == SLOTS   # every slot accounted
+        mgr.complete_restore()
+
+
+# ------------------------------------------------------------ fault injection
+def test_dump_fault_no_partial_image_then_retry_bitwise(lm_params,
+                                                        flaky_tier):
+    """A TransferError-shaped fault while committing the serving image's
+    manifest must leave NO restorable image (manifests commit last); a
+    retried dump lands, and the restore continues bit-identically."""
+    from repro.api import CheckpointSession, SessionConfig
+    from repro.core.storage import as_tier
+    lm, params = lm_params
+    inner = as_tier("remote://serve-plane-fault?seed=0")
+    # every op on images/* (the manifest commit) errors once; the chunk
+    # traffic underneath is untouched
+    tier = flaky_tier(inner, error_rate=1.0, error_budget=1,
+                      only="images/")
+
+    src = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    gen = _traffic(lm.cfg.vocab_size)
+    src.run(4, traffic=gen)
+    src.drain()
+    in_flight = set(src.live_sids())
+    cut = gen.state()
+
+    # every fault-gated op errors once (error_budget=1), so a dump-level
+    # retry loop converges. The invariant under ANY failure point: an
+    # image is either fully committed (manifest present — it commits
+    # last) or not restorable at all; never a half-image.
+    def committed():
+        return [i for i in inner.image_ids()
+                if inner.exists(inner.manifest_path(i))]
+
+    attempts = 0
+    while not committed():
+        attempts += 1
+        assert attempts <= 8, "retried dump never converged"
+        try:
+            with CheckpointSession(SessionConfig(root=tier)) as s:
+                src.checkpoint(s, traffic=cut)
+        except (TimeoutError, IOError):
+            if attempts == 1:        # schedule: first manifest write dies
+                assert not committed()
+    assert attempts > 1                             # the fault really fired
+    assert tier.stats["errors_injected"] >= 1
+
+    # restore through a healthy path: zero drops, bitwise continuation
+    src.draining = False
+    with CheckpointSession(SessionConfig(root=inner)) as s3:
+        mgr, res = SessionManager.restore_from(s3, lm)
+    assert res.digest_verified is True
+    assert in_flight <= set(mgr.sessions)
+    gen2 = _traffic(lm.cfg.vocab_size)
+    gen2.fast_forward(cut["emitted"])
+    mgr.run(10, traffic=gen2)
+    src.run(10, traffic=gen)                        # source = reference
+    o_src, o_mig = _outputs(src), _outputs(mgr)
+    assert all(o_src[sid] == o_mig[sid] for sid in in_flight)
+
+
+# ------------------------------------------------------------- prefetch hint
+def test_prefetch_hint_orders_lazy_stream(lm_params):
+    """The dump records an activity-ranked hint; RestorePlan streams
+    hinted prefixes first, in hint order, before the unmatched rest."""
+    from repro.api import CheckpointSession
+    from repro.core.plan import plan_restore
+    from repro.core.storage import as_tier
+    lm, params = lm_params
+    mgr = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    mgr.run(4, traffic=_traffic(lm.cfg.vocab_size, rate=4.0))
+    hint = mgr.prefetch_hint()
+    assert hint[0] == "params" and hint[-1] == "pool"
+    with CheckpointSession("mem://serve-plane-hint") as sess:
+        receipt = mgr.checkpoint(sess)
+    plan = plan_restore(as_tier("mem://serve-plane-hint"),
+                        receipt.image_id)
+    order = plan.prefetch_order
+
+    def hint_rank(path):
+        for i, pre in enumerate(hint):
+            if path == pre or path.startswith(pre + "/"):
+                return i
+        return len(hint)
+    ranks = [hint_rank(p) for p in order]
+    assert ranks == sorted(ranks), \
+        "lazy stream does not follow the dump's prefetch hint"
+    assert order[0].startswith("params")            # TTFT leaves first
+
+
+# ----------------------------------------------------------------- fleet
+def test_fleet_wave_migrates_serving_plane():
+    """A SimServeJob rides a coordinator preemption wave like a trainer:
+    drained at a DECODE boundary, dumped with the serve-plane side-table
+    in meta, restored elsewhere with its digest checked and zero dropped
+    sessions."""
+    from repro.fleet import SimCluster
+    cl = SimCluster(hosts=2, seed=6)
+    (jid,) = cl.submit_serve_jobs(1, ticks=3, slots=4, page_len=24,
+                                  rate=3.0)
+    job = cl.jobs[jid]
+    assert cl.coordinator.registry.get(jid).kind == "serve"
+    live = set(job.mgr.live_sids())
+    assert live                                     # wave catches real work
+    clock = job.mgr.clock
+
+    report = cl.coordinator.preemption_wave()
+    assert report.drained[jid] == clock             # decode-boundary drain
+    assert jid in report.dumped
+
+    ack = cl.coordinator.restore_job(jid)           # digest checked inside
+    assert ack is not None and ack.step == clock
+    assert live <= set(job.mgr.sessions)            # adopted, zero drops
+    job.run(8)                                      # and it keeps serving
+    assert all(job.mgr.sessions[sid].status == "done" for sid in live)
+
+
+def test_serve_wire_fields_roundtrip():
+    from repro.api import wire
+    from repro.fleet.messages import DrainCommand, Heartbeat
+    d = wire.decode(DrainCommand(job_id="j1", boundary="decode").to_wire())
+    assert d.boundary == "decode"
+    assert wire.decode(DrainCommand(job_id="j1").to_wire()).boundary \
+        == "step"
+    h = wire.decode(Heartbeat(job_id="j1", step=4, sent_at=1.0,
+                              sessions=7).to_wire())
+    assert h.sessions == 7
+
+
+# ------------------------------------------------- ServeEngine satellites
+def test_engine_generated_buffer_is_incremental(lm_params, monkeypatch):
+    """Regression for the O(tokens^2) seed: tokens append into one
+    growing buffer — no per-step restack of the whole history."""
+    lm, params = lm_params
+    eng = ServeEngine(lm, params, max_len=32, donate_cache=False)
+    eng.submit(np.zeros((2, 4), np.int32))
+    eng.generate(5)
+    out = eng.generated()
+    assert out.shape == (2, 5) and out.base is eng._gen   # a view, no copy
+    # seed-API compat: out_tokens is still a list of [B] columns
+    assert len(eng.out_tokens) == 5
+    assert np.array_equal(np.stack(eng.out_tokens, 1), out)
+
+    def boom(*a, **k):
+        raise AssertionError("token hot path restacked history")
+    monkeypatch.setattr(np, "stack", boom)
+    buf_before = eng._gen
+    eng.generate(8)                       # within capacity: same buffer,
+    assert eng._gen is buf_before         # zero reallocation per token
+    eng.generate(20)                      # growth doubles, copies once
+    monkeypatch.undo()
+    assert eng.generated().shape == (2, 20)
+    assert eng._gen.shape[1] >= 20
+
+
+def test_engine_restore_session_no_per_token_split(lm_params):
+    lm, params = lm_params
+    eng = ServeEngine(lm, params, max_len=32, donate_cache=False)
+    eng.submit(np.zeros((1, 4), np.int32))
+    eng.generate(6)
+    state = {k: np.asarray(v) for k, v in eng.session_state().items()}
+    eng2 = ServeEngine(lm, params, max_len=32, donate_cache=False)
+    eng2.restore_session(state)
+    assert np.array_equal(eng2.generated(), eng.generated())
+    assert eng2._gen.flags["C_CONTIGUOUS"]
+
+
+def test_engine_resume_from_lazy_defers_digest(lm_params):
+    """satellite: ServeEngine.resume_from(lazy=True) streams the image
+    behind a skeleton and the full materialize runs the deferred digest
+    verification — same bit-identity as the eager path, later."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+    CUT, GEN = 6, 14
+    ref = ServeEngine(lm, params, max_len=32, donate_cache=False)
+    ref.submit(np.zeros((2, 4), np.int32))
+    full = ref.generate(GEN).copy()
+
+    eng = ServeEngine(lm, params, max_len=32, donate_cache=False)
+    eng.submit(np.zeros((2, 4), np.int32))
+    eng.generate(CUT)
+    with CheckpointSession("mem://serve-engine-lazy") as sess:
+        eng.checkpoint(sess, arch=lm.cfg.name)
+
+        lz = ServeEngine(lm, params, max_len=32, donate_cache=False)
+        res = lz.resume_from(sess, lazy=True)
+        assert res.lazy is True
+        srv = res.state._server
+        assert srv.expected_digest           # dump recorded the promise...
+        assert srv.verify_tree_digest() is True   # ...materialize kept it
+        out = lz.generate(GEN)
+        assert np.array_equal(out, full)
+
+        eg = ServeEngine(lm, params, max_len=32, donate_cache=False)
+        res2 = eg.resume_from(sess)
+        assert res2.lazy is False and res2.digest_verified is True
+        assert np.array_equal(eg.generate(GEN), full)
