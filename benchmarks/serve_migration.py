@@ -68,7 +68,7 @@ def bench_zero_drop(emit, *, slots=6, page_len=24, rate=2.0,
     """Reference vs migrate-at-warm_ticks (eager and lazy): survival and
     bitwise continuation of every checkable session."""
     from repro.api import CheckpointSession
-    from repro.serving import SessionManager
+    from repro.serving import SessionManager, TrafficGenerator
     lm = _lm()
     params = _params(lm)
     vocab = lm.cfg.vocab_size
@@ -95,9 +95,10 @@ def bench_zero_drop(emit, *, slots=6, page_len=24, rate=2.0,
         mgr, res = SessionManager.restore_from(sess, lm,
                                                lazy=mode == "lazy")
         survived = in_flight <= set(mgr.sessions)
-        gen2 = _traffic(seed, vocab, rate)
-        gen2.fast_forward(
-            res.manifest["meta"]["serve_plane"]["traffic"]["emitted"])
+        # rebuild the stream from the recorded cursor, not constructor
+        # args — the image, not the restorer, owns the distribution
+        gen2 = TrafficGenerator.from_state(
+            res.manifest["meta"]["serve_plane"]["traffic"])
         if mode == "lazy":
             mgr.run(2, traffic=gen2)       # new arrivals decode first...
             mgr.complete_restore()         # ...then old pages land

@@ -161,13 +161,15 @@ class SimServeJob:
         table = meta.get("serve_plane") \
             or (meta.get("extra") or {}).get("serve_plane")
         self.mgr = SessionManager.adopt(self.lm, res.state, table)
-        cur = (table.get("traffic") or {})
-        self.traffic = TrafficGenerator(
-            seed=cur.get("seed", self.seed),
-            vocab_size=self.lm.cfg.vocab_size,
-            rate=cur.get("rate", 2.0),
-            prompt_support=(4, 6), target_max=6)
-        self.traffic.fast_forward(cur.get("emitted", 0))
+        # the recorded cursor wins over these defaults (which only cover
+        # images old enough not to carry the distribution parameters)
+        cur = dict(table.get("traffic") or {})
+        cur.setdefault("seed", self.seed)
+        cur.setdefault("vocab_size", self.lm.cfg.vocab_size)
+        cur.setdefault("rate", 2.0)
+        cur.setdefault("prompt_support", (4, 6))
+        cur.setdefault("target_max", 6)
+        self.traffic = TrafficGenerator.from_state(cur)
         self.paused = False
         self.running = True
 

@@ -122,8 +122,8 @@ class SessionManager:
                                        dtype=compute_dtype)
         self.slot_bytes = kvcache.cache_bytes(self.cfg, 1, self.page_len,
                                               compute_dtype)
-        self.pool_bytes = int(pool_bytes) if pool_bytes else \
-            self.slots * self.slot_bytes
+        self.pool_bytes = (int(pool_bytes) if pool_bytes is not None
+                           else self.slots * self.slot_bytes)
         self.free: list = list(range(self.slots))   # min-heap of slot ids
         heapq.heapify(self.free)
         self.sessions: dict = {}                    # sid -> UserSession
@@ -355,6 +355,11 @@ class SessionManager:
         and lazy restores verify it on full materialization. ``step``
         defaults to the decode clock — tick between dumps (or pass an
         explicit step) so image ids stay unique."""
+        # a dump must carry every leaf: finish a pending post-copy first,
+        # otherwise "restoring" sessions would dump with no generated
+        # history and status="restoring" — an image whose adopter strands
+        # them forever (step() skips them, complete_restore() is a no-op)
+        self.complete_restore()
         host = jax.device_get(self.plane_state())
         meta = serve_meta(arch=self.cfg.name, tokens_done=self.tokens_done,
                           sessions=len(self.live_sids()),
@@ -475,12 +480,19 @@ class SessionManager:
             self.pool = kvcache.slot_put(self.pool, page, self.cfg, idx)
         sess_img = lstate["sessions"].materialize() \
             if "sessions" in lstate else {}
-        for s in restoring:
-            leaf = sess_img[s.sid]
-            s.prompt = np.asarray(leaf["prompt"], np.int32)
-            if "generated" in leaf:
-                s.generated = [int(t) for t in np.asarray(
-                    leaf["generated"]).ravel()]
-            s.status = "active"
+        # hydrate EVERY dumped leaf still unfaulted — not just "restoring"
+        # sessions: a session QUEUED at dump time also has prompt=None,
+        # and once self._lazy drops there is nothing left to fault it
+        # from (admission would crash at prefill)
+        for s in self.sessions.values():
+            leaf = sess_img.get(s.sid)
+            if leaf is not None:
+                if s.prompt is None:
+                    s.prompt = np.asarray(leaf["prompt"], np.int32)
+                if not s.generated and "generated" in leaf:
+                    s.generated = [int(t) for t in np.asarray(
+                        leaf["generated"]).ravel()]
+            if s.status == "restoring":
+                s.status = "active"
         lstate.materialize()        # root: deferred digest verification
         self._lazy = None

@@ -139,6 +139,36 @@ class TrafficGenerator:
             self.emitted += 1
 
     def state(self) -> dict:
-        """JSON cursor for serve-plane metadata."""
+        """JSON cursor for serve-plane metadata. Carries the distribution
+        parameters too: a restorer that rebuilt the generator with
+        different ``prompt_support``/``target_*`` would silently diverge
+        from the dumped stream, so ``from_state`` reads them back instead
+        of trusting constructor defaults."""
         return {"seed": self.seed, "emitted": int(self.emitted),
-                "rate": self.rate, "vocab_size": self.vocab_size}
+                "rate": self.rate, "vocab_size": self.vocab_size,
+                "prompt_support": list(self.prompt_support),
+                "prompt_zipf_s": self.prompt_zipf_s,
+                "target_alpha": self.target_alpha,
+                "target_scale": self.target_scale,
+                "target_max": self.target_max}
+
+    @classmethod
+    def from_state(cls, cur: dict, **overrides):
+        """Rebuild a generator from a ``state()`` cursor and fast-forward
+        to its position — the restore half of the replayable stream.
+        Cursor fields missing from old images fall back to constructor
+        defaults (or ``overrides``).
+
+        Example::
+
+            gen2 = TrafficGenerator.from_state(src_gen.state())
+            gen2.take(1)           # the request the source would emit next
+        """
+        kw = {k: cur[k] for k in
+              ("seed", "vocab_size", "rate", "prompt_support",
+               "prompt_zipf_s", "target_alpha", "target_scale",
+               "target_max") if k in cur}
+        kw.update(overrides)
+        gen = cls(**kw)
+        gen.fast_forward(int(cur.get("emitted", 0)))
+        return gen

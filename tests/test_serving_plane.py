@@ -62,6 +62,27 @@ def test_traffic_stream_is_seeded_and_replayable():
     assert st["seed"] == 3 and st["emitted"] == 10
 
 
+def test_traffic_state_carries_distribution_and_rebuilds():
+    """state() records the distribution parameters and from_state()
+    rebuilds the exact stream from the cursor alone — a restorer that
+    guessed constructor args would silently diverge."""
+    g = TrafficGenerator(seed=11, vocab_size=50, rate=2.5,
+                         prompt_support=(3, 9), prompt_zipf_s=2.0,
+                         target_alpha=1.5, target_scale=2.0, target_max=9)
+    head = g.take(7)
+    assert len(head) == 7
+    cut = g.state()
+    assert tuple(cut["prompt_support"]) == (3, 9)
+    assert cut["target_max"] == 9 and cut["prompt_zipf_s"] == 2.0
+    g2 = TrafficGenerator.from_state(cut)
+    assert g2.emitted == 7
+    a, b = g.take(5), g2.take(5)
+    assert [r.sid for r in a] == [r.sid for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert [r.target for r in a] == [r.target for r in b]
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+
+
 def test_traffic_shapes_are_heavy_tailed_but_bounded():
     g = TrafficGenerator(seed=5, vocab_size=64, rate=3.0,
                          prompt_support=(4, 6, 8), target_max=12)
@@ -97,6 +118,19 @@ def test_byte_budget_admission_control(lm_params):
     assert all(mgr.sessions[r.sid].status == "done" for r in reqs)
     assert mgr.stats["rejected"] == 0
     assert mgr.live_bytes == 0
+
+
+def test_pool_bytes_zero_admits_nothing(lm_params):
+    """An explicit pool_bytes=0 is a zero-admission budget, not 'use the
+    full pool' (truthiness regression)."""
+    lm, params = lm_params
+    mgr = SessionManager(lm, params, slots=SLOTS, page_len=PAGE,
+                         pool_bytes=0)
+    assert mgr.pool_bytes == 0
+    s = mgr.submit(Request("z", 0.0, np.zeros(4, np.int32), 2, 1))
+    mgr.step()
+    assert s.status == "queued" and mgr.used_slots == 0
+    assert mgr.queue == ["z"] and s.n == 0
 
 
 def test_oversized_request_rejected_up_front(lm_params):
@@ -227,6 +261,82 @@ def test_restoring_sessions_hold_their_slots(lm_params):
         assert held and not held & set(mgr.free)    # disjoint partition:
         assert len(held) + len(mgr.free) == SLOTS   # every slot accounted
         mgr.complete_restore()
+
+
+def test_lazy_restore_hydrates_queued_sessions(lm_params):
+    """A session QUEUED at dump time (the overloaded-plane case lazy
+    autoscale targets) must survive complete_restore(): its prompt
+    hydrates from the image, so admission after the lazy state drops
+    prefills instead of crashing on prompt=None."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+
+    def plane():
+        m = SessionManager(lm, params, slots=1, page_len=PAGE)
+        m.submit(Request("a", 0.0, np.arange(4, dtype=np.int32), 3, 1))
+        m.submit(Request("b", 0.0, np.arange(4, dtype=np.int32) + 1, 2, 2))
+        return m
+
+    ref = plane()                       # slots=1: "b" waits behind "a"
+    for _ in range(8):
+        ref.step()
+    o_ref = _outputs(ref)
+    assert ref.sessions["b"].status == "done"
+
+    src = plane()
+    src.step()
+    src.drain()
+    assert src.sessions["a"].status == "active"
+    assert src.sessions["b"].status == "queued" and src.queue == ["b"]
+    with CheckpointSession("mem://serve-plane-queued") as sess:
+        src.checkpoint(sess)
+        mgr, _res = SessionManager.restore_from(sess, lm, lazy=True)
+        assert mgr.queue == ["b"] and mgr.sessions["b"].prompt is None
+        mgr.complete_restore()
+        assert mgr._lazy is None
+        assert mgr.sessions["b"].prompt is not None   # hydrated, not lost
+        for _ in range(8):
+            mgr.step()                  # admits "b" once "a" frees its slot
+    assert mgr.sessions["b"].status == "done"
+    assert _outputs(mgr) == o_ref       # bit-identical through the queue
+
+
+def test_checkpoint_during_lazy_restore_completes_first(lm_params):
+    """checkpoint() on a half-restored plane implicitly finishes the
+    post-copy: the image never records status="restoring" sessions (a
+    replica adopting those would strand them forever)."""
+    from repro.api import CheckpointSession
+    lm, params = lm_params
+    src = SessionManager(lm, params, slots=SLOTS, page_len=PAGE)
+    gen = _traffic(lm.cfg.vocab_size, rate=4.0)
+    src.run(3, traffic=gen)
+    src.drain()
+    in_flight = set(src.live_sids())
+    assert in_flight
+    with CheckpointSession("mem://serve-plane-redump") as sess:
+        src.checkpoint(sess, traffic=gen.state())
+        mgr, _ = SessionManager.restore_from(sess, lm, lazy=True)
+        assert any(s.status == "restoring" for s in mgr.sessions.values())
+        r2 = mgr.checkpoint(sess, step=mgr.clock + 1, traffic=gen.state())
+        assert mgr._lazy is None                    # dump completed it
+
+        mgr2, res2 = SessionManager.restore_from(sess, lm,
+                                                 image_id=r2.image_id)
+    assert res2.digest_verified is True
+    table = res2.manifest["meta"]["serve_plane"]
+    assert all(rec["status"] != "restoring"
+               for rec in table["sessions"].values())
+    assert all(rec["n"] > 0 for rec in table["sessions"].values()
+               if rec["status"] == "active")
+    assert in_flight <= set(mgr2.sessions)
+    for _ in range(40):                 # the re-dumped image still serves
+        mgr2.step()
+        if all(mgr2.sessions[sid].status == "done" for sid in in_flight):
+            break
+    src.draining = False
+    src.run(40)                         # source = uninterrupted reference
+    o_src, o_mig = _outputs(src), _outputs(mgr2)
+    assert all(o_src[sid] == o_mig[sid] for sid in in_flight)
 
 
 # ------------------------------------------------------------ fault injection
