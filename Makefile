@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: check test lint api-check docs-check cov-remote bench-compare \
 	bench-smoke bench-facade bench-migration bench-stw bench-remote \
-	bench-codec bench-fleet bench-serve run-example
+	bench-codec bench-fleet bench-serve run-example run-fleet-demo
 
 # fast smoke: checkpoint core in under a minute
 check:
@@ -87,3 +87,8 @@ bench-serve:
 # run one example by name: make run-example EX=elastic_resize [ARGS="--steps 60"]
 run-example:
 	python examples/$(EX).py $(ARGS)
+
+# socket-transport smoke: coordinator + 3 worker subprocesses over a
+# UDS, full preemption wave, bit-identical restores (CI gate)
+run-fleet-demo:
+	python examples/fleet_multiprocess.py --smoke

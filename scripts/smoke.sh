@@ -16,5 +16,7 @@ exec python -m pytest -q \
     tests/test_remote_tier.py \
     tests/test_remote_properties.py \
     tests/test_fleet.py \
+    tests/test_transport_fuzz.py \
+    tests/test_transport_chaos.py \
     tests/test_serving_plane.py \
     "$@"

@@ -34,6 +34,7 @@ Contract (tests/test_api_surface.py snapshots the field lists):
 from __future__ import annotations
 
 import dataclasses
+import json
 
 WIRE_MAJOR = 1
 WIRE_MINOR = 0
@@ -262,6 +263,41 @@ def decode(d: dict):
         raise WireVersionError(f"unknown wire kind {kind!r} (known: "
                                f"{sorted(_KINDS)})")
     return _KINDS[kind].from_wire(d)
+
+
+def to_json_bytes(frame: dict) -> bytes:
+    """Canonical byte encoding of one wire dict: compact UTF-8 JSON.
+    This is THE serialization both transports share — LoopbackTransport's
+    in-process round trip and the socket framing encode through the same
+    door, so a frame that survives loopback survives the socket
+    byte-for-byte (and vice versa). Raises WireCodingError for values
+    JSON cannot carry.
+
+    Example::
+
+        data = to_json_bytes(DumpRequest(state=None, step=7).to_wire())
+        assert from_json_bytes(data)["step"] == 7
+    """
+    try:
+        return json.dumps(frame, separators=(",", ":")).encode("utf-8")
+    except (TypeError, ValueError) as e:
+        raise WireCodingError(f"frame is not wire-encodable: {e}") from e
+
+
+def from_json_bytes(data: bytes) -> dict:
+    """Inverse of ``to_json_bytes``. Raises ValueError on bytes that are
+    not a JSON object — the transport layer wraps that in its own typed
+    FrameError.
+
+    Example::
+
+        frame = from_json_bytes(b'{"kind": "DrainCommand", ...}')
+    """
+    obj = json.loads(data.decode("utf-8"))
+    if not isinstance(obj, dict):
+        raise ValueError(f"wire frame decodes to {type(obj).__name__}, "
+                         f"not an object")
+    return obj
 
 
 def registered_kinds() -> dict:

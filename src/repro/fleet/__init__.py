@@ -23,6 +23,11 @@ their memory. This package is that layer over CheckpointSessions:
                 wire frame (repro.api.wire)
   messages      the control-plane vocabulary: Heartbeat, DrainCommand/
                 DrainAck, RestoreAck, ErrorReply
+  transport     the REAL wire — framed TCP/UDS sockets under the same
+                contract: HELLO handshake with (job_id, incarnation),
+                sequence numbers + dedup window (reconnect-and-resume,
+                at-most-once execution), coordinator_serve() with a
+                journaled registry that survives coordinator restarts
   simcluster    SimCluster/SimJob/SimServeJob — a deterministic
                 fleet-in-a-process (seeded arrivals, seeded mid-wave
                 node failures, live serving planes as jobs) for tests
@@ -40,11 +45,19 @@ from repro.fleet.placement import PlacementDecision, PlacementPlanner
 from repro.fleet.registry import JobRecord, JobRegistry
 from repro.fleet.simcluster import SimCluster, SimJob, SimServeJob
 from repro.fleet.topology import ClusterTopology, HostInfo, retarget_root
+from repro.fleet.transport import (CoordinatorServer, FrameDecoder,
+                                   FrameError, HandshakeError,
+                                   ReconnectPolicy, SocketTransport,
+                                   WorkerAgent, coordinator_serve,
+                                   encode_frame, parse_url)
 
 __all__ = [
-    "ClusterTopology", "DrainAck", "DrainCommand", "ErrorReply",
-    "FleetClient", "FleetCoordinator", "Heartbeat", "HostDownError",
+    "ClusterTopology", "CoordinatorServer", "DrainAck", "DrainCommand",
+    "ErrorReply", "FleetClient", "FleetCoordinator", "FrameDecoder",
+    "FrameError", "HandshakeError", "Heartbeat", "HostDownError",
     "HostInfo", "JobRecord", "JobRegistry", "LoopbackTransport",
-    "PlacementDecision", "PlacementPlanner", "RestoreAck", "SimCluster",
-    "SimJob", "SimServeJob", "WaveReport", "retarget_root",
+    "PlacementDecision", "PlacementPlanner", "ReconnectPolicy",
+    "RestoreAck", "SimCluster", "SimJob", "SimServeJob",
+    "SocketTransport", "WaveReport", "WorkerAgent", "coordinator_serve",
+    "encode_frame", "parse_url", "retarget_root",
 ]

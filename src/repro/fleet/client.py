@@ -21,7 +21,6 @@ delivering (the coordinator's cue to fail the host and re-place)."""
 from __future__ import annotations
 
 import dataclasses
-import json
 
 from repro.api import wire
 from repro.api.config import SessionConfig
@@ -39,6 +38,25 @@ class HostDownError(ConnectionError):
     the command it carried did not run). Raised by the transport itself
     — a job-side failure that DID run arrives as an ErrorReply
     instead."""
+
+
+def dispatch_command(client, frame: dict) -> dict:
+    """THE client-side command dispatch, shared by every transport.
+
+    Both legs pass through ``wire.to_json_bytes``/``from_json_bytes`` —
+    the exact serialization the socket framing uses — so LoopbackTransport
+    and the socket worker loop execute commands identically: a frame that
+    serializes on loopback can never fail only on the socket path (and
+    vice versa).
+
+    Example::
+
+        reply = dispatch_command(client, DrainCommand(job_id="j0").to_wire())
+        assert reply["kind"] == "DrainAck"
+    """
+    delivered = wire.from_json_bytes(wire.to_json_bytes(frame))
+    reply = client.execute(delivered)
+    return wire.from_json_bytes(wire.to_json_bytes(reply))
 
 
 class FleetClient:
@@ -147,6 +165,24 @@ class FleetClient:
                          sessions=int(self.sessions_provider())
                          if self.sessions_provider else 0).to_wire()
 
+    def connect(self, url: str, **agent_kw):
+        """Dial a socket coordinator and serve its commands: returns a
+        started ``repro.fleet.transport.WorkerAgent``. This is the socket
+        counterpart of handing a LoopbackTransport to the coordinator —
+        the same client works behind either.
+
+        Example::
+
+            agent = client.connect("unix:///tmp/coord.sock",
+                                   heartbeat_every_s=1.0)
+            ...
+            agent.stop()
+        """
+        from repro.fleet.transport import WorkerAgent
+        agent = WorkerAgent(self, url, **agent_kw)
+        agent.start()
+        return agent
+
     def close(self):
         self.session.close()
 
@@ -180,11 +216,12 @@ class LoopbackTransport:
         if self.dead:
             raise HostDownError(f"host {self.host!r} is down; frame for "
                                 f"{self.client.job_id!r} undeliverable")
-        encoded = json.dumps(frame)         # coordinator -> job leg
         self.frames_sent += 1
-        reply = self.client.execute(json.loads(encoded))
+        # both wire legs live inside dispatch_command — the SAME dispatch
+        # the socket worker loop runs, so the two transports cannot drift
+        reply = dispatch_command(self.client, frame)
         if self.dead:                       # died while the command ran:
             raise HostDownError(            # the reply is lost with it
                 f"host {self.host!r} died mid-command")
         self.frames_received += 1
-        return json.loads(json.dumps(reply))   # job -> coordinator leg
+        return reply

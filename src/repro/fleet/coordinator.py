@@ -332,8 +332,13 @@ class FleetCoordinator:
                 self.registry.mark(job_id, "dead")
                 return None
         if host is None:
-            decision = self.planner.plan(rec, exclude=tuple(exclude))
-            host = decision.host
+            if self.topology.hosts():
+                decision = self.planner.plan(rec, exclude=tuple(exclude))
+                host = decision.host
+            else:
+                # socket fleets without a modeled topology: the job's own
+                # (relaunched) endpoint IS the placement
+                host = rec.host
         if self.spawner is None:
             raise RuntimeError("restore placement needs a spawner "
                                "(cluster-provided job launcher)")

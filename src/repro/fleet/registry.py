@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 
+from repro.api import wire
+
 
 @dataclasses.dataclass
 class JobRecord:
@@ -54,11 +56,57 @@ class JobRegistry:
     ``clock`` is a zero-arg callable in the coordinator's time domain
     (SimCluster's virtual clock in tests, ``time.monotonic`` live)."""
 
-    def __init__(self, *, clock=None, heartbeat_timeout_s: float = 30.0):
+    def __init__(self, *, clock=None, heartbeat_timeout_s: float = 30.0,
+                 on_change=None):
         self.clock = clock or (lambda: 0.0)
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self._jobs: dict = {}
         self._lock = threading.Lock()
+        # zero-arg callback fired after every mutation, OUTSIDE the lock
+        # — the socket coordinator journals registry.to_wire() here so a
+        # restarted coordinator resumes from the last committed table
+        self.on_change = on_change
+
+    def _changed(self):
+        cb = self.on_change
+        if cb is not None:
+            cb()
+
+    # ---------------------------------------------------------- wire form
+    def to_wire(self) -> dict:
+        """The whole table as wire data (JobRecords are already wire-safe
+        by construction: configs travel as dicts, never sessions). This
+        is what the socket coordinator journals after every mutation."""
+        with self._lock:
+            jobs = [dataclasses.asdict(r) for r in self._jobs.values()]
+        return {"kind": "JobRegistry",
+                "schema_version": wire.SCHEMA_VERSION,
+                "heartbeat_timeout_s": self.heartbeat_timeout_s,
+                "jobs": jobs}
+
+    @classmethod
+    def from_wire(cls, d: dict, *, clock=None,
+                  heartbeat_timeout_s: float | None = None,
+                  on_change=None) -> "JobRegistry":
+        """Rebuild the table from a journaled snapshot. Every record's
+        ``last_heartbeat`` is restamped to the NEW clock: heartbeat
+        timestamps do not survive a process restart (the clock domain
+        died with the old coordinator), so every job gets a fresh
+        liveness window — re-adopted on its next HELLO, re-placed via
+        check_heartbeats() if it never returns."""
+        wire.check_version(d, "JobRegistry")
+        reg = cls(clock=clock,
+                  heartbeat_timeout_s=float(
+                      d.get("heartbeat_timeout_s", 30.0)
+                      if heartbeat_timeout_s is None else heartbeat_timeout_s),
+                  on_change=on_change)
+        known = {f.name for f in dataclasses.fields(JobRecord)}
+        now = reg.clock()
+        for j in d.get("jobs", []):
+            rec = JobRecord(**{k: v for k, v in j.items() if k in known})
+            rec.last_heartbeat = now
+            reg._jobs[rec.job_id] = rec
+        return reg
 
     # ----------------------------------------------------------- lifecycle
     def register(self, job_id: str, config_wire: dict, *,
@@ -77,7 +125,8 @@ class JobRegistry:
                             phase="running",
                             last_heartbeat=self.clock())
             self._jobs[job_id] = rec
-            return rec
+        self._changed()
+        return rec
 
     def get(self, job_id: str) -> JobRecord:
         with self._lock:
@@ -99,7 +148,32 @@ class JobRegistry:
             rec.last_heartbeat = self.clock() if now is None else now
             rec.heartbeats += 1
             rec.step = max(rec.step, int(step))
-            return rec
+        self._changed()
+        return rec
+
+    def adopt(self, job_id: str, *, host: str | None = None,
+              incarnation: int = 0, step: int = 0) -> JobRecord:
+        """A live worker announced itself (a socket HELLO): refresh
+        liveness and reconcile the phase with the evidence. A job the
+        old coordinator marked ``lost`` is running after all; a HELLO
+        carrying a HIGHER incarnation proves a restore the table never
+        saw complete. A ``restoring`` claim at the SAME incarnation is
+        left standing — the claim CAS holds across restarts."""
+        with self._lock:
+            rec = self._jobs[job_id]
+            rec.last_heartbeat = self.clock()
+            rec.heartbeats += 1
+            if host:
+                rec.host = host
+            rec.step = max(rec.step, int(step))
+            if int(incarnation) > rec.incarnation:
+                rec.incarnation = int(incarnation)
+                if rec.phase == "restoring":
+                    rec.phase = "running"
+            if rec.phase == "lost":
+                rec.phase = "running"
+        self._changed()
+        return rec
 
     def alive(self, job_id: str, now: float | None = None) -> bool:
         now = self.clock() if now is None else now
@@ -133,6 +207,7 @@ class JobRegistry:
             rec.step = max(rec.step, int(step))
             rec.state_digest = state_digest
             rec.phase = "dumped"
+        self._changed()
 
     def claim_restore(self, job_id: str) -> bool:
         """Compare-and-set: True for exactly one caller per incarnation.
@@ -143,7 +218,8 @@ class JobRegistry:
             if rec.phase == "restoring":
                 return False
             rec.phase = "restoring"
-            return True
+        self._changed()          # the claim itself is durable: a restarted
+        return True              # coordinator must not become a second winner
 
     def complete_restore(self, job_id: str, *, host: str, step: int):
         with self._lock:
@@ -153,10 +229,12 @@ class JobRegistry:
             rec.phase = "running"
             rec.incarnation += 1
             rec.last_heartbeat = self.clock()
+        self._changed()
 
     def mark(self, job_id: str, phase: str):
         with self._lock:
             self._jobs[job_id].phase = phase
+        self._changed()
 
     def mark_host_lost(self, host: str) -> list:
         """Every non-durable job on a dead host becomes ``lost`` (its
@@ -169,4 +247,6 @@ class JobRegistry:
                     if rec.phase != "restoring":
                         rec.phase = "lost"
                     out.append(rec)
+        if out:
+            self._changed()
         return out

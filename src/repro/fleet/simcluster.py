@@ -26,6 +26,7 @@ COORDINATOR's batching, not thread-pool incidentals."""
 from __future__ import annotations
 
 import itertools
+import tempfile
 import threading
 
 import numpy as np
@@ -37,6 +38,8 @@ from repro.fleet.coordinator import FleetCoordinator
 from repro.fleet.placement import PlacementPlanner
 from repro.fleet.registry import JobRegistry
 from repro.fleet.topology import ClusterTopology
+from repro.fleet.transport import CoordinatorServer, ReconnectPolicy, \
+    WorkerAgent
 
 _STORE_SEQ = itertools.count()
 
@@ -180,7 +183,10 @@ def _jax():
 
 
 class SimCluster:
-    """Hosts + jobs + coordinator, wired through loopback transports.
+    """Hosts + jobs + coordinator, wired through loopback transports by
+    default — or over a REAL Unix-domain socket with
+    ``transport="socket"`` (every frame crosses the framed wire through
+    per-job WorkerAgents; same jobs, same digests, same seeded chaos).
 
     Example::
 
@@ -199,7 +205,9 @@ class SimCluster:
                  dump_concurrency: int = 4,
                  leaf_kb: int = 32, leaves: int = 4,
                  codec: CodecPolicy | None = None,
-                 extra_uri_params: str = "", policy=None):
+                 extra_uri_params: str = "", policy=None,
+                 transport: str = "loopback",
+                 resume_timeout_s: float = 5.0):
         self.seed = int(seed)
         self.rng = np.random.default_rng(self.seed)
         self.store_name = store or f"fleet{next(_STORE_SEQ)}"
@@ -230,6 +238,18 @@ class SimCluster:
             clock=self.clock, heartbeat_timeout_s=heartbeat_timeout_s,
             dump_concurrency=dump_concurrency, spawner=self.spawn,
             policy=policy)
+        if transport not in ("loopback", "socket"):
+            raise ValueError(f"transport must be 'loopback' or 'socket', "
+                             f"got {transport!r}")
+        self.transport_mode = transport
+        self.server = None
+        self.agents: dict = {}              # job_id -> live WorkerAgent
+        if transport == "socket":
+            sockdir = tempfile.mkdtemp(prefix="repro-simfleet-")
+            self.socket_url = f"unix://{sockdir}/coord.sock"
+            self.server = CoordinatorServer(
+                self.socket_url, coordinator=self.coordinator,
+                resume_timeout_s=resume_timeout_s)
 
     # ------------------------------------------------------------- plumbing
     def clock(self) -> float:
@@ -296,14 +316,38 @@ class SimCluster:
     def _attach(self, job, host: str):
         cfg = self._config(job.job_id, host)
         client = self._client(job, cfg.to_wire(), host)
-        transport = LoopbackTransport(client, host=host,
-                                      on_send=self._on_frame)
         self.jobs[job.job_id] = job
         self.clients[job.job_id] = client
+        if self.server is not None:
+            transport = self.server.attach(
+                job.job_id, cfg.to_wire(), host=host,
+                kind=getattr(job, "kind", "train"))
+            transport.on_send = self._on_frame
+            self._dial(job.job_id, client, incarnation=0)
+        else:
+            transport = LoopbackTransport(client, host=host,
+                                          on_send=self._on_frame)
+            self.coordinator.attach(job.job_id, transport, host=host,
+                                    config_wire=cfg.to_wire(),
+                                    kind=getattr(job, "kind", "train"))
         self.all_transports.append(transport)
-        self.coordinator.attach(job.job_id, transport, host=host,
-                                config_wire=cfg.to_wire(),
-                                kind=getattr(job, "kind", "train"))
+
+    def _dial(self, job_id: str, client: FleetClient, *,
+              incarnation: int):
+        """Socket mode: connect one worker agent for this incarnation
+        (the previous incarnation's agent, if any, is retired first)."""
+        old = self.agents.get(job_id)
+        if old is not None:
+            old.stop(bye=False)
+        agent = WorkerAgent(client, self.socket_url,
+                            incarnation=incarnation,
+                            reconnect=ReconnectPolicy(attempts=40,
+                                                      backoff_s=0.02,
+                                                      backoff_max_s=0.2))
+        agent.start()
+        self.agents[job_id] = agent
+        self.server.wait_connected([job_id], timeout=10.0)
+        return agent
 
     def _client(self, job, config_wire: dict,
                 host: str) -> FleetClient:
@@ -328,16 +372,25 @@ class SimCluster:
             meta_provider=job.meta if serve else None,
             sessions_provider=job.sessions_live if serve else None)
 
-    def spawn(self, rec, host: str, config_wire: dict) -> LoopbackTransport:
+    def spawn(self, rec, host: str, config_wire: dict):
         """The coordinator's job launcher: a fresh incarnation of the
         job on ``host`` (new client, new session over the retargeted
-        config) — state arrives via the RestoreRequest that follows."""
+        config) — state arrives via the RestoreRequest that follows. In
+        socket mode the new incarnation DIALS IN like a relaunched
+        worker would; the old incarnation's reconnects are refused as
+        stale at the HELLO."""
         job = self.jobs[rec.job_id]
         job.paused = True                     # old incarnation is gone
         client = self._client(job, config_wire, host)
         self.clients[rec.job_id] = client
-        transport = LoopbackTransport(client, host=host,
-                                      on_send=self._on_frame)
+        if self.server is not None:
+            transport = self.server.new_incarnation(rec.job_id, host=host)
+            transport.on_send = self._on_frame
+            self._dial(rec.job_id, client,
+                       incarnation=transport.incarnation)
+        else:
+            transport = LoopbackTransport(client, host=host,
+                                          on_send=self._on_frame)
         self.all_transports.append(transport)
         return transport
 
@@ -353,8 +406,13 @@ class SimCluster:
             if heartbeat and job_id not in mute and job.running \
                     and not job.paused \
                     and self.topology.alive(self._host_of(job_id)):
-                self.coordinator.deliver(
-                    self.clients[job_id].heartbeat(self.now))
+                if self.server is not None:
+                    # socket mode: the beacon crosses the real wire as
+                    # an event envelope (delivery is asynchronous)
+                    self.agents[job_id].heartbeat(self.now)
+                else:
+                    self.coordinator.deliver(
+                        self.clients[job_id].heartbeat(self.now))
 
     def _host_of(self, job_id: str) -> str:
         return self.coordinator.registry.get(job_id).host
@@ -397,6 +455,16 @@ class SimCluster:
                 if armed[1] == 0:
                     self.fail_host(target or host)
             self._armed = [a for a in self._armed if a[1] > 0]
+
+    # ------------------------------------------------------------- shutdown
+    def shutdown(self):
+        """Socket mode cleanup: stop every agent, close the server.
+        Loopback clusters have nothing to tear down (no-op)."""
+        for agent in self.agents.values():
+            agent.stop(bye=False)
+        self.agents.clear()
+        if self.server is not None:
+            self.server.close(bye=True)
 
     # ------------------------------------------------------------- digests
     def job_digest(self, job_id: str) -> str:

@@ -21,7 +21,10 @@ and retry tests build on them instead of hand-corrupting files."""
 from __future__ import annotations
 
 import hashlib
+import random
+import struct
 import threading
+import time
 
 from repro.core.storage import Tier
 
@@ -153,3 +156,187 @@ class FlakyTier(Tier):
 
     def age_s(self, rel: str) -> float | None:
         return self.inner.age_s(rel)
+
+
+# --------------------------------------------------------------------------
+# Socket chaos: the transport-layer sibling of FlakyTier. Where FlakyTier
+# breaks storage at the Tier API, ChaosSocket breaks the WIRE at chosen
+# byte offsets — connection cuts mid-frame, short writes, delays — so the
+# fleet socket transport's reconnect-and-resume path is exercised at
+# exact, replayable protocol moments (not sleep races).
+
+_FRAME_HEADER = struct.Struct(">2sI")    # repro.fleet.transport framing
+
+
+class _FrameCursor:
+    """Tracks (frame index, bytes-into-frame) through a raw byte stream
+    by parsing the transport's length-prefixed headers — how a cut lands
+    '9 bytes into the 2nd frame' instead of 'at byte 107 and pray'."""
+
+    def __init__(self):
+        self.frame = 1                  # 1-based index of frame in progress
+        self.into = 0                   # bytes consumed of current frame
+        self.need = None                # total frame size once header known
+        self._hdr = bytearray()
+
+    def scan(self, data: bytes, target: tuple) -> int | None:
+        """Consume ``data``; return the offset WITHIN data where
+        (frame_idx, byte_off) is reached, or None if not in this chunk."""
+        tf, toff = target
+        pos, n = 0, len(data)
+        while pos < n:
+            if self.need is None:       # still assembling the header
+                take = min(_FRAME_HEADER.size - len(self._hdr), n - pos)
+            else:
+                take = min(self.need - self.into, n - pos)
+            if self.frame == tf and self.into + take > toff >= self.into:
+                return pos + (toff - self.into)
+            if self.need is None:
+                self._hdr.extend(data[pos:pos + take])
+                if len(self._hdr) == _FRAME_HEADER.size:
+                    _magic, ln = _FRAME_HEADER.unpack(bytes(self._hdr))
+                    self.need = _FRAME_HEADER.size + ln
+            pos += take
+            self.into += take
+            if self.need is not None and self.into == self.need:
+                self.frame += 1
+                self.into = 0
+                self.need = None
+                self._hdr = bytearray()
+        return None
+
+
+class ChaosSocket:
+    """Wrap a real socket with deterministic byte-level misbehavior:
+
+      * ``cut_recv_frame=(n, off)`` — sever the connection ``off`` bytes
+        into the n-th RECEIVED frame (1-based; frame boundaries parsed
+        from the live header stream). The bytes before the cut are
+        delivered, the rest never arrive: "the command died mid-frame".
+      * ``cut_send_frame=(n, off)`` — sever ``off`` bytes into the n-th
+        SENT frame: "the reply died mid-frame" (the peer sees a torn
+        frame; the sender sees ConnectionError).
+      * ``short_write=k`` — sendall in chunks of at most k bytes, so the
+        peer's decoder sees split/coalesced deliveries.
+      * ``recv_cap=k`` — deliver at most k bytes per recv (same, inbound).
+      * ``delay_s`` — sleep between send chunks (slow-peer emulation).
+
+    ``cuts`` records what fired; ``sent``/``received`` count clean bytes.
+    Wire it in via ``WorkerAgent(wrap_socket=...)``.
+    """
+
+    def __init__(self, sock, *, cut_recv_frame: tuple | None = None,
+                 cut_send_frame: tuple | None = None,
+                 short_write: int = 0, recv_cap: int = 0,
+                 delay_s: float = 0.0):
+        self.sock = sock
+        self.cut_recv_frame = tuple(cut_recv_frame) if cut_recv_frame \
+            else None
+        self.cut_send_frame = tuple(cut_send_frame) if cut_send_frame \
+            else None
+        self.short_write = int(short_write)
+        self.recv_cap = int(recv_cap)
+        self.delay_s = float(delay_s)
+        self.sent = 0
+        self.received = 0
+        self.cuts: list = []
+        self._rcursor = _FrameCursor()
+        self._send_frame_i = 1          # sendall call == one frame
+        self._dead = False
+
+    # --------------------------------------------------------------- sends
+    def _send_chunks(self, data: bytes):
+        step = self.short_write or max(1, len(data))
+        for i in range(0, len(data), step):
+            if self.delay_s:
+                time.sleep(self.delay_s)
+            self.sock.sendall(data[i:i + step])
+
+    def sendall(self, data):
+        if self._dead:
+            raise ConnectionError("chaos: send on a cut connection")
+        data = bytes(data)
+        if self.cut_send_frame is not None \
+                and self._send_frame_i == self.cut_send_frame[0]:
+            off = min(self.cut_send_frame[1], len(data))
+            self._send_chunks(data[:off])
+            self.cuts.append(("send", self._send_frame_i, off))
+            self._dead = True
+            self.sock.close()
+            raise ConnectionError(
+                f"chaos: cut {off} bytes into sent frame "
+                f"{self._send_frame_i}")
+        self._send_frame_i += 1
+        self._send_chunks(data)
+        self.sent += len(data)
+
+    # --------------------------------------------------------------- recvs
+    def recv(self, n: int) -> bytes:
+        if self._dead:
+            raise ConnectionError("chaos: recv on a cut connection")
+        cap = min(n, self.recv_cap) if self.recv_cap else n
+        data = self.sock.recv(cap)
+        if not data:
+            return data
+        if self.cut_recv_frame is not None:
+            off = self._rcursor.scan(data, self.cut_recv_frame)
+            if off is not None:
+                self.cuts.append(("recv",) + self.cut_recv_frame)
+                self._dead = True
+                self.sock.close()
+                prefix = data[:off]
+                if prefix:
+                    return prefix       # the torn frame's delivered part
+                raise ConnectionError(
+                    f"chaos: cut at received frame "
+                    f"{self.cut_recv_frame[0]}")
+        self.received += len(data)
+        return data
+
+    # --------------------------------------------------------- delegation
+    def close(self):
+        self.sock.close()
+
+    def shutdown(self, how):
+        self.sock.shutdown(how)
+
+    def settimeout(self, t):
+        self.sock.settimeout(t)
+
+    def __getattr__(self, name):
+        return getattr(self.sock, name)
+
+
+class ChaosPlan:
+    """A seeded schedule of connection cuts for a RECONNECTING endpoint:
+    pass ``plan.wrap`` as ``WorkerAgent(wrap_socket=...)`` and every
+    fresh connection draws its cut point (received-frame index and byte
+    offset) from one seeded stream — the whole chaos run replays
+    identically under the same seed. After ``limit`` cuts the plan goes
+    quiet so the run can converge.
+
+    ``frame_span``/``off_span`` are inclusive ranges; frame 1 is the
+    hello_ack, so spans starting at 2 cut commands, not handshakes."""
+
+    def __init__(self, seed: int = 0, *, limit: int = 4,
+                 frame_span: tuple = (2, 3), off_span: tuple = (1, 40)):
+        self._rng = random.Random(int(seed))
+        self.limit = int(limit)
+        self.frame_span = tuple(frame_span)
+        self.off_span = tuple(off_span)
+        self.sockets: list = []
+        self.planned: list = []
+
+    def cuts_fired(self) -> int:
+        return sum(len(s.cuts) for s in self.sockets
+                   if isinstance(s, ChaosSocket))
+
+    def wrap(self, sock):
+        if self.cuts_fired() >= self.limit:
+            return sock                 # plan exhausted: clean wire
+        cut = (self._rng.randint(*self.frame_span),
+               self._rng.randint(*self.off_span))
+        self.planned.append(cut)
+        cs = ChaosSocket(sock, cut_recv_frame=cut)
+        self.sockets.append(cs)
+        return cs

@@ -205,8 +205,11 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     # with the dump path's hot loop — device-side fused encode+digest;
     # 15 with DMTCP's territory — a coordinator over many jobs; 16 with
     # the serving plane: row 8's "network applications" scenario at
-    # multi-session scale, migratable because the state is abstract
-    assert sorted(api.TABLE1) == list(range(1, 17))
+    # multi-session scale, migratable because the state is abstract; 17
+    # with the coordinator wire carried over real sockets (criu service
+    # speaks RPC over a local UNIX socket, but has no fleet protocol,
+    # no reconnect-resume, no coordinator restart)
+    assert sorted(api.TABLE1) == list(range(1, 18))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
@@ -216,3 +219,4 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     assert api.TABLE1[14][2] == "device_codec"
     assert api.TABLE1[15][2] == "fleet_coordination"
     assert api.TABLE1[16][2] == "live_serving"
+    assert api.TABLE1[17][2] == "socket_transport"

@@ -136,7 +136,16 @@ def test_docs_mention_the_new_knobs():
                  "SessionManager", "TrafficGenerator", "pool_bytes",
                  "page_len", "complete_restore", "prefetch_hint",
                  'boundary="decode"', '"restoring"', "bench-serve",
-                 "serve_migration"):
+                 "serve_migration",
+                 # socket transport (ISSUE 9): URL schemes, framing,
+                 # handshake/fencing, resume knobs, and the restart
+                 # runbook
+                 "tcp://", "unix://", "coordinator_serve",
+                 "registry_tier", "ReconnectPolicy", "backoff_max_s",
+                 "resume_timeout_s", "dedup_window",
+                 "heartbeat_every_s", "FrameError", "HandshakeError",
+                 "MAX_FRAME_BYTES", "incarnation", "epoch",
+                 "run-fleet-demo"):
         assert knob in guide, f"operator guide lost mention of {knob!r}"
     readme = (ROOT / "README.md").read_text()
     assert 'mode="pre_dump"' in readme and "lazy=True" in readme
