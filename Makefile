@@ -31,7 +31,7 @@ test:
 cov-remote:
 	python -m pytest -q --cov=repro.core --cov-report=json:/tmp/cov.json \
 		tests/test_remote_tier.py tests/test_remote_properties.py \
-		tests/test_checkpoint_pipeline.py
+		tests/test_checkpoint_pipeline.py tests/test_crossjob.py
 	python scripts/coverage_gate.py /tmp/cov.json repro/core/remote.py 90
 
 # style + correctness lint (config in pyproject.toml; CI gate)
@@ -66,10 +66,13 @@ bench-migration:
 bench-stw:
 	python benchmarks/stop_the_world.py
 
-# remote transfer: parallel multipart >= 2x serial, warm cache < cold
-# (bit-identical restores hard-asserted in every mode)
+# remote transfer: parallel multipart >= 2x serial, warm cache < cold,
+# cross-job warm start >= 5x cold with dedup'd bytes-on-wire strictly
+# below the naive per-job layout (bit-identical restores hard-asserted
+# in every mode); records the remote_cross_job section of
+# BENCH_<pr>.json. BENCH_ARGS=--smoke for the CI-sized config.
 bench-remote:
-	python benchmarks/remote_transfer.py
+	python benchmarks/remote_transfer.py $(BENCH_ARGS)
 
 # fleet preemption wave: staggered dumps <= naive under a constrained
 # store (budget provably held), placement-aware restore hit rate >

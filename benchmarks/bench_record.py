@@ -20,7 +20,7 @@ import os
 import tempfile
 import time
 
-PR = 8          # bump per growth PR: the file is BENCH_<PR>.json
+PR = 10         # bump per growth PR: the file is BENCH_<PR>.json
 SCHEMA = 1
 
 

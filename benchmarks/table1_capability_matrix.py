@@ -497,13 +497,64 @@ def socket_transport(tmp):
             f"({frames} wire frames after the restart)")
 
 
+def cross_job_dedup(tmp):
+    """Row 18: two jobs share one content-addressed pool. Job A trains
+    and dumps; job B (same architecture, same state content) dumps into
+    its OWN manifest namespace and must move zero chunk bytes — the
+    global index answers every probe. Then job A is retained away and
+    gc'd; job B must still restore bitwise identically (refcount journal
+    protection), served from A's host's hot cache via peer fetch rather
+    than the cold store."""
+    from repro.core.registry import Registry
+    from repro.core.remote import (CachingTier, NetworkModel, RemoteTier,
+                                   RetryPolicy, SimulatedObjectStore)
+    from repro.core.storage import MemoryTier
+    cfg, lm, step = _env()
+    ds = TokenDataset(f"{tmp}/d18", vocab_size=cfg.vocab_size, seed=18)
+    st, _ = _train(lm, step, init_train_state(lm, jax.random.PRNGKey(0)),
+                   DataIterator(ds, global_batch=2, seq_len=32), 3)
+    store = SimulatedObjectStore(network=NetworkModel(latency_s=0.0005))
+    alias = lambda p: RemoteTier(store, prefix=p, shared_chunks=True,
+                                 retry=RetryPolicy(backoff_base_s=1e-4),
+                                 part_bytes=64 << 10)
+    job_a, job_b = alias("jobA"), alias("jobB")
+    it = DataIterator(ds, global_batch=2, seq_len=32, step=3)
+    host_a = CachingTier(MemoryTier(), job_a)
+    CheckpointSession(host_a).save(
+        st, step=3, meta=train_meta(arch=cfg.name, step=3,
+                                    data_state=it.state()))
+    bytes_a = store.stats["bytes_in"]
+    res_b = CheckpointSession(job_b).save(
+        st, step=3, meta=train_meta(arch=cfg.name, step=3,
+                                    data_state=it.state()))
+    assert job_b.stats["delta_chunks"] == 0, "shared pool re-uploaded"
+    deduped = res_b["stats"]["chunks_deduped"]
+    assert deduped > 0
+    assert store.stats["bytes_in"] - bytes_a < bytes_a / 4
+    reg_a = Registry(job_a)
+    reg_a.truncate_from(0)
+    gc = reg_a.gc()
+    assert gc["removed"] == 0 and gc["kept"] > 0, "gc reaped shared chunks"
+    host_b = CachingTier(MemoryTier(), job_b, peers=[host_a.hot])
+    got, _ = CheckpointSession(host_b).load_latest(
+        target_struct=jax.eval_shape(
+            lambda: init_train_state(lm, jax.random.PRNGKey(0))))
+    assert _bitwise(st, jax.tree.map(jnp.asarray, got))
+    assert host_b.stats["peer_hits"] > 0, "peer fetch never engaged"
+    return (f"job B deduped {deduped} chunks against job A's pool "
+            f"(0 delta bytes), gc after A's retention kept "
+            f"{gc['kept']} journal-referenced chunks, B restored "
+            f"bitwise via {host_b.stats['peer_hits']} peer-cache hits")
+
+
 # capability name -> heavy exercise; coverage of TABLE1 is asserted in run()
 EXERCISES = {fn.__name__: fn for fn in (
     serial_dump_restore, threaded_dump, open_file_cursors,
     env_fingerprint_portability, self_checkpoint, backend_retarget,
     device_state_capture, serving_session_migration, replica_repair,
     cross_topology_restore, pre_dump, lazy_restore, remote_storage,
-    device_codec, fleet_coordination, live_serving, socket_transport)}
+    device_codec, fleet_coordination, live_serving, socket_transport,
+    cross_job_dedup)}
 
 
 def run(emit=print) -> list:

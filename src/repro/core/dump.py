@@ -92,6 +92,16 @@ def dump(tree, root, *, step: int, image_id: str | None = None,
                              meta=meta or {}, parent=parent,
                              env=manifest.env_fingerprint(),
                              topology=topology)
+        journal = tier.ref_journal()
+        if journal is not None and num_processes == 1:
+            # refcount journal entry lands BEFORE the manifest (both
+            # inside the writer guard): a crash between the two leaves an
+            # orphan ref (bounded leak, swept later), never a committed
+            # manifest whose chunks a peer job's gc may reap
+            journal.publish(
+                plan.image_id,
+                {h for rec in out["records"] for h in rec["chunks"]},
+                manifest_rel=tier.manifest_path(plan.image_id))
         if num_processes > 1:
             part = f"images/{plan.image_id}/manifest.part{process_index}.json"
             tier.write_bytes(part, manifest.to_json(man))
@@ -124,6 +134,14 @@ def merge_parts(tier: Tier, image_id: str, num_processes: int, replicas=()):
     man = manifest.build(image_id, step=base["step"], leaves=leaves,
                          meta=base["meta"], parent=base["parent"],
                          env=base["env"], topology=base["topology"])
+    journal = tier.ref_journal()
+    if journal is not None:
+        # the merged manifest is the whole distributed image — publish
+        # its full chunk set before the commit point (same crash
+        # ordering as the single-process path)
+        journal.publish(image_id,
+                        {h for r in leaves for h in r["chunks"]},
+                        manifest_rel=tier.manifest_path(image_id))
     blob = manifest.to_json(man)
     tier.write_bytes(tier.manifest_path(image_id), blob, atomic=True)
     for r in replicas:

@@ -79,7 +79,9 @@ class CheckpointExecutor:
         stats = {"bytes_raw": 0, "bytes_stored": 0, "bytes_deduped": 0,
                  "chunks": 0, "chunks_deduped": 0,
                  "leaves_reused": 0, "bytes_reused": 0,
-                 "leaves_device": 0}
+                 "leaves_device": 0, "chunks_reuploaded": 0}
+        crossjob = bool(getattr(tier, "shared_chunks", False))
+        upload_delta = getattr(tier, "upload_delta", None)
         encoded = encoded or {}
         stats_lock = threading.Lock()
         claimed: set = set()        # intra-dump first-writer-wins
@@ -99,6 +101,12 @@ class CheckpointExecutor:
             uniq = set(rec["chunks"])
             try:
                 if len(tier.has_chunks(uniq)) != len(uniq):
+                    return None
+                if crossjob and len(tier.verify_chunks(uniq)) != len(uniq):
+                    # a cross-job index hit is a claim, not a fact: a
+                    # peer job's gc (another process over the shared
+                    # store) may have reaped between probe and now —
+                    # full encode instead of a manifest that 404s
                     return None
                 for r in replicas:
                     rpresent = r.has_chunks(uniq)
@@ -151,6 +159,16 @@ class CheckpointExecutor:
             rec["orig_shape"] = orig_shape
 
             present = tier.has_chunks({h for h, _ in views})
+            if crossjob and present:
+                # TOCTOU close (cheap existence recheck): entries a
+                # foreign gc invalidated fall out of ``present`` here and
+                # are re-uploaded below instead of silently skipped
+                confirmed = tier.verify_chunks(present)
+                if len(confirmed) != len(present):
+                    with stats_lock:
+                        stats["chunks_reuploaded"] += \
+                            len(present) - len(confirmed)
+                present = confirmed
             to_write, deduped_bytes = [], 0
             with claim_lock:
                 for h, v in views:
@@ -161,12 +179,21 @@ class CheckpointExecutor:
                         to_write.append((h, v))
 
             if self._io is None:
-                tier.write_chunks(to_write)
+                if upload_delta is not None:
+                    upload_delta(to_write)
+                else:
+                    tier.write_chunks(to_write)
                 for r in replicas:
                     r.write_chunks(views)
             else:
-                futs = [self._io.submit(tier.write_chunk, h, v)
-                        for h, v in to_write]
+                if upload_delta is not None and to_write:
+                    # one delta batch per leaf: absent chunks travel as
+                    # batched parts on the transfer lanes (the io slot
+                    # just shepherds the batch)
+                    futs = [self._io.submit(upload_delta, to_write)]
+                else:
+                    futs = [self._io.submit(tier.write_chunk, h, v)
+                            for h, v in to_write]
                 for r in replicas:
                     # batched probe per replica too: don't fan out a
                     # no-op io task for every already-mirrored chunk

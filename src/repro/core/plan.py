@@ -73,6 +73,14 @@ class RestorePlan:
     def chain_depth(self) -> int:
         return len(self.manifests)
 
+    def chunk_set(self) -> frozenset:
+        """Every chunk hash this restore may read, across the loaded
+        manifest chain — the unit peer-fetch wiring and warm-start
+        planning reason about (fleet placement scores hosts by overlap
+        with exactly this set)."""
+        return frozenset(h for m in self.manifests.values()
+                         for r in m["leaves"] for h in r["chunks"])
+
     @property
     def prefetch_order(self) -> tuple:
         """Default lazy-restore streaming order: params first (the forward

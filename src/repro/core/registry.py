@@ -125,13 +125,24 @@ class Registry:
                 prev_host = None
         return parent, prev_host
 
+    def _drop_image(self, image_id: str):
+        """Delete an image AND retract its refcount-journal record, in
+        that order: a retracted ref on a still-present manifest would
+        expose chunks the manifest references to a peer job's gc; the
+        reverse crash (deleted manifest, lingering ref) only over-retains
+        until the journal sweep."""
+        self.tier.delete(f"images/{image_id}")
+        journal = self.tier.ref_journal()
+        if journal is not None:
+            journal.retract(image_id)
+
     def truncate_from(self, step) -> list:
         """History rewrite: delete every image at or after ``step``.
         Returns deleted image ids (their chunks fall to the next gc)."""
         deleted = []
         for m in self.images():
             if m["step"] >= int(step):
-                self.tier.delete(f"images/{m['image_id']}")
+                self._drop_image(m["image_id"])
                 deleted.append(m["image_id"])
         return deleted
 
@@ -162,7 +173,7 @@ class Registry:
         deleted = []
         for m in imgs:
             if m["image_id"] not in keep:
-                self.tier.delete(f"images/{m['image_id']}")
+                self._drop_image(m["image_id"])
                 deleted.append(m["image_id"])
         return deleted
 
@@ -184,6 +195,17 @@ class Registry:
             man = read_manifest(self.tier, m["image_id"])
             for rec in man["leaves"]:
                 referenced.update(rec["chunks"])
+        journal = self.tier.ref_journal()
+        if journal is not None:
+            # shared pool: this registry does NOT own every chunk it can
+            # see. Reaping is guarded by the refcount journal — a chunk
+            # lives while ANY job's published record references it. The
+            # union is re-read from the store (not the process cache) so
+            # a restarted coordinator, or a peer job this process never
+            # met, still protects its images; own-namespace orphan refs
+            # are swept first so crashed dumps can't pin chunks forever.
+            journal.sweep()
+            referenced |= journal.referenced(reload=True)
         removed, kept = 0, 0
         try:
             names = self.tier.listdir("chunks")

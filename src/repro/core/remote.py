@@ -230,6 +230,12 @@ class SimulatedObjectStore:
         # store (remote://, cache+remote://, hand-built RemoteTiers)
         # delegates its writer()/reaper() here
         self.rw_guard = RWGuard()
+        # the global chunk index for shared_chunks tiers lives on the
+        # STORE (like the guard): every job's tier alias reads and
+        # repairs ONE set, so a delete through any alias is instantly
+        # visible to every other alias's dedup probe
+        self.shared_chunk_index: set | None = None
+        self.shared_index_lock = threading.Lock()
         self._objects: dict = {}
         self._mtimes: dict = {}
         self._mp: dict = {}          # upload_id -> {"key", "parts"}
@@ -416,13 +422,18 @@ class RemoteTier(Tier):
     restore's byte faults cost ``length`` bytes of simulated transfer,
     not the whole chunk."""
 
+    # shadows Tier._chunk_index via the property pair below so the index
+    # can live per-tier (default) or per-STORE (shared_chunks)
+    _local_chunk_index: set | None = None
+
     def __init__(self, store: SimulatedObjectStore, *, prefix: str = "",
                  retry: RetryPolicy | None = None,
                  part_bytes: int = 1 << 20,
                  multipart_threshold: int | None = None,
-                 executor=None):
+                 executor=None, shared_chunks: bool = False):
         self.store = store
         self.prefix = prefix.strip("/")
+        self.shared_chunks = bool(shared_chunks)
         self.retry = retry or RetryPolicy()
         self.part_bytes = int(part_bytes)
         self.multipart_threshold = int(multipart_threshold
@@ -430,11 +441,42 @@ class RemoteTier(Tier):
                                        else part_bytes)
         self._executor = executor
         self.stats = {"retries": 0, "parts_uploaded": 0,
-                      "multipart_uploads": 0, "singlepart_uploads": 0}
+                      "multipart_uploads": 0, "singlepart_uploads": 0,
+                      "delta_batches": 0, "delta_chunks": 0,
+                      "delta_bytes": 0}
         self._stats_lock = threading.Lock()
 
     def _k(self, rel: str) -> str:
-        return f"{self.prefix}/{rel}" if self.prefix else rel
+        """Store key for ``rel``. With ``shared_chunks`` the chunk pool
+        and the cross-job index (``chunks/``, ``index/``) are GLOBAL —
+        content addressing makes per-job copies pure waste — while
+        manifests and everything else stay under the job's prefix."""
+        if self.prefix and not (self.shared_chunks and (
+                rel == "chunks" or rel.startswith("chunks/")
+                or rel == "index" or rel.startswith("index/"))):
+            return f"{self.prefix}/{rel}"
+        return rel
+
+    # ---- chunk index storage: per-store when the pool is shared, so a
+    # delete_chunk through job A's alias is visible to job B's probe
+    @property
+    def _chunk_index(self):
+        if self.shared_chunks:
+            return self.store.shared_chunk_index
+        return self._local_chunk_index
+
+    @_chunk_index.setter
+    def _chunk_index(self, value):
+        if self.shared_chunks:
+            self.store.shared_chunk_index = value
+        else:
+            self._local_chunk_index = value
+
+    @property
+    def _index_lock(self):
+        if self.shared_chunks:
+            return self.store.shared_index_lock
+        return Tier._index_lock.fget(self)
 
     def _count(self, key: str, n: int = 1):
         with self._stats_lock:
@@ -499,6 +541,83 @@ class RemoteTier(Tier):
         self._count("parts_uploaded", len(parts))
         self._count("multipart_uploads")
 
+    def upload_delta(self, items):
+        """Batched delta upload: only the chunks the dedup probe proved
+        absent from the (possibly cross-job) cold index travel. Small
+        chunks fan out as parallel single puts on the executor's transfer
+        lanes — the same lanes multipart parts ride, under the same
+        retry/backoff — while chunks above the multipart threshold run
+        their own (internally parallel) multipart upload. Items already
+        present (a benign race with a peer's concurrent dump) are
+        skipped. Raises the first TransferError after draining in-flight
+        puts — never abandons a lane mid-upload."""
+        items = [(h, v) for h, v in items]
+        if not items:
+            return
+        self._count("delta_batches")
+
+        def put_one(h, v):
+            if self.has_chunk(h):
+                return
+            rel = self.chunk_path(h)
+            if len(v) > self.multipart_threshold:
+                self._put_multipart(rel, bytes(v))
+            else:
+                self._call("put", rel,
+                           lambda: self.store.put(self._k(rel), v))
+                self._count("singlepart_uploads")
+            self.note_chunk_present(h)
+            self._count("delta_chunks")
+            self._count("delta_bytes", len(v))
+
+        small = [(h, v) for h, v in items
+                 if len(v) <= self.multipart_threshold]
+        large = [(h, v) for h, v in items
+                 if len(v) > self.multipart_threshold]
+        futs = [self._lanes().submit_transfer(put_one, h, v)
+                for h, v in small]
+        errs: list = []
+        if futs and futs[0] is None:        # serial engine: inline
+            for h, v in small:
+                put_one(h, v)
+        else:
+            for f in futs:                  # drain ALL before raising
+                try:
+                    f.result()
+                except BaseException as e:
+                    errs.append(e)
+        if errs:
+            raise errs[0]
+        for h, v in large:                  # each fans its own parts
+            put_one(h, v)
+
+    def verify_chunks(self, hashes) -> set:
+        """Authoritative cross-job recheck: ONE retried list of the
+        (global) pool instead of a HEAD per hash, repairing the shared
+        index on the way. This is what the executor calls before
+        trusting an index hit on a shared pool (TOCTOU close: probe says
+        present -> a peer process's gc reaps -> restore would 404)."""
+        hashes = set(hashes)
+        if not hashes:
+            return set()
+        try:
+            names = self.listdir("chunks")
+        except FileNotFoundError:
+            names = []
+        pool = {n.removesuffix(".bin") for n in names if n.endswith(".bin")}
+        present = hashes & pool
+        if self._chunk_index is not None:
+            with self._index_lock:
+                self._chunk_index.difference_update(hashes - present)
+                self._chunk_index.update(present)
+        return present
+
+    def ref_journal(self):
+        # a shared pool REQUIRES refcounted gc — no opt-in to forget
+        if self._ref_journal is None and self.shared_chunks:
+            self.enable_ref_journal()
+        return self._ref_journal
+
     # -------------------------------------------------------------- reads
     def read_bytes(self, rel: str) -> bytes:
         return self._call("get", rel, lambda: self.store.get(self._k(rel)))
@@ -550,19 +669,54 @@ class CachingTier(Tier):
       CachingTier between dumper, registry and peer sessions (the
       ``cache+remote://`` registry does exactly that).
 
-    ``read_chunk_range`` does NOT fill on a miss: byte-range faults are
-    the latency path; promoting a whole chunk would reintroduce the full
-    transfer lazy restore exists to avoid."""
+    ``read_chunk_range`` serves ranges from the hot front when the chunk
+    is present; the FIRST miss on a chunk stays a cheap range read (the
+    latency path lazy restore exists for), and any repeat miss promotes
+    the whole chunk hot — repeated faults on one chunk cost at most two
+    cold reads, not one per fault.
 
-    def __init__(self, hot: Tier, cold: Tier):
+    ``peers`` (set via ``set_peers``, ordered nearest first) are other
+    hosts' HOT fronts over the same cold pool: chunk reads try hot, then
+    each peer (whole-chunk fetches are verified against the content
+    address; a corrupt or racing peer is skipped), then cold. The fleet
+    topology wires these from its hot-inventory snapshots
+    (``ClusterTopology.wire_peer_fetch``)."""
+
+    def __init__(self, hot: Tier, cold: Tier, peers=()):
         self.hot = hot
         self.cold = cold
-        self.stats = {"hot_hits": 0, "cold_reads": 0, "fills": 0}
+        self.peers = list(peers)
+        self.stats = {"hot_hits": 0, "cold_reads": 0, "fills": 0,
+                      "range_misses": 0, "promotions": 0,
+                      "peer_hits": 0, "peer_rejects": 0}
+        self._range_miss: dict = {}     # chunk hash -> ranged misses seen
         self._stats_lock = threading.Lock()
 
     def _count(self, key: str):
         with self._stats_lock:
             self.stats[key] += 1
+
+    def set_peers(self, peers):
+        """Replace the nearest-first peer hot-front list (tiers over the
+        SAME cold pool — peer data is hash-verified, so a stale peer
+        degrades to a cold read, never to wrong bytes)."""
+        self.peers = list(peers)
+
+    def _read_chunk_from_peers(self, h: str) -> bytes | None:
+        """Whole-chunk fetch from the nearest peer holding ``h``, verified
+        against the content address. None when no peer can serve it."""
+        for peer in self.peers:
+            try:
+                if not peer.has_chunk(h):
+                    continue
+                data = peer.read_chunk(h)
+            except (FileNotFoundError, OSError, KeyError):
+                continue            # peer raced an eviction: next peer
+            if hashlib.sha256(data).hexdigest() == h:
+                self._count("peer_hits")
+                return data
+            self._count("peer_rejects")
+        return None
 
     # ------------------------------------------------------------- writes
     def write_bytes(self, rel: str, data, atomic: bool = False):
@@ -578,10 +732,12 @@ class CachingTier(Tier):
             return out
         except FileNotFoundError:
             pass
-        data = self.cold.read_bytes(rel)
-        self._count("cold_reads")
-        self.hot.write_bytes(rel, data)          # read-through fill
         h = self._as_chunk(rel)
+        data = self._read_chunk_from_peers(h) if h and self.peers else None
+        if data is None:
+            data = self.cold.read_bytes(rel)
+            self._count("cold_reads")
+        self.hot.write_bytes(rel, data)          # read-through fill
         if h:                                    # keep the hot index true
             self.hot.note_chunk_present(h)
         self._count("fills")
@@ -596,6 +752,31 @@ class CachingTier(Tier):
         if self.hot.has_chunk(h):
             self._count("hot_hits")
             return self.hot.read_chunk_range(h, offset, length)
+        with self._stats_lock:
+            self.stats["range_misses"] += 1
+            misses = self._range_miss[h] = self._range_miss.get(h, 0) + 1
+        if misses > 1:
+            # repeat fault on the same chunk: promote it hot (nearest
+            # peer first, else one last cold read) so every further
+            # fault is a local range — a chunk costs at most two cold
+            # reads under any fault pattern, never one per fault
+            data = self._read_chunk_from_peers(h) if self.peers else None
+            if data is None:
+                data = self.cold.read_chunk(h)
+                self._count("cold_reads")
+            self.hot.write_chunk(h, data)
+            self._count("promotions")
+            return bytes(data[offset:offset + length])
+        # first fault: stay on the cheap ranged path (transferring the
+        # whole chunk here is exactly what lazy restore exists to avoid)
+        for peer in self.peers:
+            try:
+                if peer.has_chunk(h):
+                    out = peer.read_chunk_range(h, offset, length)
+                    self._count("peer_hits")
+                    return out
+            except (FileNotFoundError, OSError, KeyError):
+                continue
         self._count("cold_reads")
         return self.cold.read_chunk_range(h, offset, length)
 
@@ -670,9 +851,42 @@ class CachingTier(Tier):
         self.cold.write_chunk(h, data)
         self.hot.write_chunk(h, data)
 
+    def upload_delta(self, items):
+        """Batched absent-chunk upload through the cold layer's delta
+        path (transfer-lane fan-out when it has one), write-through to
+        the hot front."""
+        items = list(items)
+        up = getattr(self.cold, "upload_delta", None)
+        if up is not None:
+            up(items)
+        else:
+            self.cold.write_chunks(items)
+        self.hot.write_chunks(items)
+
     def delete_chunk(self, h: str):
         self.hot.delete_chunk(h)
         self.cold.delete_chunk(h)
+
+    # ---------------------------------------------- cross-job delegation
+    @property
+    def shared_chunks(self) -> bool:
+        return bool(getattr(self.cold, "shared_chunks", False))
+
+    def verify_chunks(self, hashes) -> set:
+        """Cold is authoritative; a chunk the recheck disproves is also
+        dropped from the hot front (keeps hot-subset-of-cold true after
+        a foreign gc)."""
+        present = self.cold.verify_chunks(hashes)
+        for h in set(hashes) - present:
+            if self.hot.has_chunk(h):
+                self.hot.delete_chunk(h)
+        return present
+
+    def ref_journal(self):
+        return self.cold.ref_journal()
+
+    def enable_ref_journal(self):
+        return self.cold.enable_ref_journal()
 
     def _guard_obj(self):
         # gc through this cache and gc/dump through any other alias of
@@ -721,8 +935,9 @@ def registered_tiers() -> dict:
     out = {}
     with _REG_LOCK:
         items = list(_TIERS.items())
-    for (scheme, name, front, prefix), tier in items:
-        qs = [f"{k}={v}" for k, v in (("front", front), ("prefix", prefix))
+    for (scheme, name, front, prefix, shared), tier in items:
+        qs = [f"{k}={v}" for k, v in (("front", front), ("prefix", prefix),
+                                      ("shared", int(shared) or ""))
               if v]
         uri = f"{scheme}://{name}" + ("?" + "&".join(qs) if qs else "")
         out[uri] = tier
@@ -755,8 +970,17 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
                                    aggregate-bandwidth pool) without
                                    image-id collisions — a fleet's whole
                                    point of contention
+      shared=1                     content-addressed CROSS-JOB pool: the
+                                   chunk namespace (and the refcount
+                                   journal under index/) is global even
+                                   under prefix= — every job dedups
+                                   against every other job's chunks, gc
+                                   goes through the refcount journal
+                                   (core/chunkindex.py), and the chunk
+                                   index lives on the store so all
+                                   aliases share one truth
 
-    The registry key is (scheme, store name, front, prefix) — NOT the
+    The registry key is (scheme, store name, front, prefix, shared) — NOT the
     full URI — so ``remote://ck`` and ``remote://ck?attempts=6`` are the
     SAME tier object (later params are ignored, like get_store's models),
     and ``cache+remote://ck`` wraps the very RemoteTier ``remote://ck``
@@ -769,7 +993,8 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
     params = parse_qs(query) if query else {}
     front = _q(params, "front", str, "") if scheme == "cache+remote" else ""
     prefix = _q(params, "prefix", str, "")
-    key = (scheme, name, front, prefix)
+    shared = bool(_q(params, "shared", int, 0))
+    key = (scheme, name, front, prefix, shared)
     with _REG_LOCK:
         if key in _TIERS:
             return _TIERS[key]
@@ -800,7 +1025,8 @@ def tier_from_uri(scheme: str, rest: str) -> Tier:
         thresh_kb = _q(params, "threshold_kb", int, part_kb)
         tier = RemoteTier(store, prefix=prefix, retry=retry,
                           part_bytes=part_kb << 10,
-                          multipart_threshold=thresh_kb << 10)
+                          multipart_threshold=thresh_kb << 10,
+                          shared_chunks=shared)
     with _REG_LOCK:
         return _TIERS.setdefault(key, tier)
 

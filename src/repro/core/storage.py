@@ -79,6 +79,12 @@ class Tier:
     _chunk_index: set | None = None
     _chunk_index_lock: threading.Lock | None = None
     _rw_guard: RWGuard | None = None
+    _ref_journal = None
+    # True on tiers whose chunk pool is shared ACROSS jobs (the
+    # content-addressed cross-job store: remote://...?shared=1). The
+    # executor treats a shared pool's index hits as claims to recheck,
+    # not facts — see verify_chunks and core/executor.py.
+    shared_chunks: bool = False
 
     @property
     def _index_lock(self) -> threading.Lock:
@@ -184,6 +190,37 @@ class Tier:
             with self._index_lock:
                 return self._chunk_index.intersection(hashes)
         return {h for h in hashes if self.exists(self.chunk_path(h))}
+
+    def verify_chunks(self, hashes) -> set:
+        """Authoritative presence recheck: bypass the in-memory index and
+        ask the backing storage which of ``hashes`` actually exist,
+        repairing the index on the way (stale entries dropped, confirmed
+        ones kept). This is the executor's cheap existence recheck before
+        trusting a cross-job dedup hit — on a shared pool a peer's gc in
+        another process may have reaped a chunk the index still lists."""
+        present = {h for h in hashes
+                   if self.exists(self.chunk_path(h))}
+        if self._chunk_index is not None:
+            with self._index_lock:
+                self._chunk_index.difference_update(set(hashes) - present)
+                self._chunk_index.update(present)
+        return present
+
+    # ---- cross-job refcount journal (see core/chunkindex.py)
+    def ref_journal(self):
+        """The RefJournal for this tier's pool, or None when cross-job
+        accounting is not enabled. Shared-pool remote tiers create one
+        automatically; other tiers opt in via enable_ref_journal()."""
+        return self._ref_journal
+
+    def enable_ref_journal(self):
+        """Attach (once) a refcount journal to this tier: dumps publish
+        per-image chunk references, Registry.gc unions them into its
+        live set. Returns the journal."""
+        if self._ref_journal is None:
+            from repro.core.chunkindex import RefJournal
+            self._ref_journal = RefJournal(self)
+        return self._ref_journal
 
     def write_chunk(self, h: str, data):
         if not self.has_chunk(h):  # dedup

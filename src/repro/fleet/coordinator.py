@@ -342,6 +342,12 @@ class FleetCoordinator:
         if self.spawner is None:
             raise RuntimeError("restore placement needs a spawner "
                                "(cluster-provided job launcher)")
+        if self.topology.hosts():
+            # peer-aware fetch: the chosen host's hot fronts pull chunks
+            # from the nearest warm peer (hash-verified, LAN-speed)
+            # before paying the cold remote — wired from the same
+            # hot-inventory snapshots the placement score used
+            self.topology.wire_peer_fetch(host)
         config = retarget_root(rec.config_wire, host)
         transport = self.spawner(rec, host, config)
         self.transports[job_id] = transport

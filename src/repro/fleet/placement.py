@@ -30,6 +30,10 @@ class PlacementDecision:
     chunks_total: int
     chunks_warm: int
     scores: dict                   # host_id -> overlap fraction considered
+    chunks_peer: int = 0           # chunks cold here but hot on a peer —
+    #                                what peer-aware fetch saves from the
+    #                                cold remote after wire_peer_fetch
+    peer_hosts: tuple = ()         # peers (nearest first) contributing them
 
 
 def image_chunk_set(tier, image_id: str) -> frozenset:
@@ -89,11 +93,24 @@ class PlacementPlanner:
                                   # free: sort by id descending is fine
                                   # as long as it is deterministic
                                   h.host_id))
+        # what the chosen host can still avoid pulling from cold: chunks
+        # not warm locally but hot on some peer (nearest-first credit,
+        # each chunk counted once) — the coordinator wires this via
+        # topology.wire_peer_fetch before the restore runs
+        missing = chunks - self.topology.hot_inventory(best.host_id)
+        peer_hosts, covered = [], set()
+        for peer in self.topology.nearest_peers(best.host_id):
+            gain = (missing - covered) \
+                & self.topology.hot_inventory(peer)
+            if gain:
+                peer_hosts.append(peer)
+                covered |= gain
         return PlacementDecision(
             job_id=job.job_id, host=best.host_id,
             overlap=scores[best.host_id], chunks_total=len(chunks),
             chunks_warm=int(round(scores[best.host_id] * len(chunks))),
-            scores=scores)
+            scores=scores, chunks_peer=len(covered),
+            peer_hosts=tuple(peer_hosts))
 
     def plan_random(self, job, *, exclude: tuple = (), rng=None,
                     devices_needed: int = 1) -> PlacementDecision:

@@ -67,6 +67,7 @@ class ClusterTopology:
 
     def __init__(self):
         self._hosts: dict = {}
+        self._links: dict = {}      # frozenset({a, b}) -> cost
         self._lock = threading.Lock()
 
     # -------------------------------------------------------------- hosts
@@ -98,6 +99,47 @@ class ClusterTopology:
         with self._lock:
             h = self._hosts.get(host_id)
             return bool(h and h.alive)
+
+    # -------------------------------------------------------------- links
+    def set_link(self, a: str, b: str, cost: float):
+        """Relative transfer cost between two hosts (symmetric; rack
+        locality, zone crossings — any monotone distance). Unset pairs
+        default to 1.0, self-distance is 0.0."""
+        with self._lock:
+            self._links[frozenset((a, b))] = float(cost)
+
+    def link_cost(self, a: str, b: str) -> float:
+        if a == b:
+            return 0.0
+        with self._lock:
+            return self._links.get(frozenset((a, b)), 1.0)
+
+    def nearest_peers(self, host_id: str) -> list:
+        """Alive hosts other than ``host_id``, nearest first (link cost,
+        then host id for determinism) — the order peer-fetch tries them."""
+        return [h.host_id for h in sorted(
+            (h for h in self.hosts() if h.host_id != host_id),
+            key=lambda h: (self.link_cost(host_id, h.host_id), h.host_id))]
+
+    def wire_peer_fetch(self, host_id: str) -> int:
+        """Point every hot front pinned to ``host_id`` at its peers' hot
+        fronts, nearest first: a restore placed on ``host_id`` then
+        fetches each chunk from the closest peer's hot cache (LAN-speed,
+        hash-verified) before falling back to the cold remote. Returns
+        the number of peer fronts wired (0 when the host has no fronts
+        or the fleet no warm peers)."""
+        peer_fronts = []
+        for peer in self.nearest_peers(host_id):
+            for tier in self.host_fronts(peer):
+                hot = getattr(tier, "hot", None)
+                if hot is not None:
+                    peer_fronts.append(hot)
+        wired = 0
+        for tier in self.host_fronts(host_id):
+            if hasattr(tier, "set_peers"):
+                tier.set_peers(peer_fronts)
+                wired = len(peer_fronts)
+        return wired
 
     # ---------------------------------------------------------- inventory
     def host_fronts(self, host_id: str) -> list:

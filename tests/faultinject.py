@@ -157,6 +157,43 @@ class FlakyTier(Tier):
     def age_s(self, rel: str) -> float | None:
         return self.inner.age_s(rel)
 
+    # ------------------------------------------------ pool-level identity
+    # The wrapper misbehaves; it does not OWN a separate pool. Guard,
+    # shared-pool flag, chunk index and refcount journal are the inner
+    # tier's (exactly as CachingTier delegates to its cold layer) — so a
+    # gc racing a dump through a FlakyTier still excludes correctly, and
+    # cross-job dedup/verify paths behave the same under fault storms.
+    def _guard_obj(self):
+        return self.inner._guard_obj()
+
+    @property
+    def shared_chunks(self) -> bool:
+        return bool(getattr(self.inner, "shared_chunks", False))
+
+    def verify_chunks(self, hashes) -> set:
+        self._gate("list", "chunks")
+        return self.inner.verify_chunks(hashes)
+
+    def ref_journal(self):
+        return self.inner.ref_journal()
+
+    def enable_ref_journal(self):
+        return self.inner.enable_ref_journal()
+
+    def enable_chunk_index(self):
+        self.inner.enable_chunk_index()
+        return self
+
+    def chunk_index_enabled(self) -> bool:
+        return self.inner.chunk_index_enabled()
+
+    def chunk_index_snapshot(self):
+        return self.inner.chunk_index_snapshot()
+
+    def delete_chunk(self, h: str):
+        self._gate("delete", self.inner.chunk_path(h))
+        self.inner.delete_chunk(h)
+
 
 # --------------------------------------------------------------------------
 # Socket chaos: the transport-layer sibling of FlakyTier. Where FlakyTier

@@ -195,7 +195,7 @@ def test_codec_policy_delta8_round_trip(tmp_path):
 def test_capabilities_report_covers_table1_and_lookups():
     rep = capabilities()
     rows = rep.table1_rows()
-    assert [c.paper_row for c in rows] == list(range(1, 18))
+    assert [c.paper_row for c in rows] == list(range(1, 19))
     assert rep.supported("serial_dump_restore")
     assert rep["mem_tier"].name == "mem_tier"
     with pytest.raises(KeyError):

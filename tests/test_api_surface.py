@@ -208,8 +208,10 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     # multi-session scale, migratable because the state is abstract; 17
     # with the coordinator wire carried over real sockets (criu service
     # speaks RPC over a local UNIX socket, but has no fleet protocol,
-    # no reconnect-resume, no coordinator restart)
-    assert sorted(api.TABLE1) == list(range(1, 18))
+    # no reconnect-resume, no coordinator restart); 18 with the
+    # shared content-addressed pool — cross-job image dedup plus
+    # refcounted gc, where criu image dirs are strictly private
+    assert sorted(api.TABLE1) == list(range(1, 19))
     for row, entry in api.TABLE1.items():
         name, verdict, cap = entry
         assert isinstance(name, str) and isinstance(cap, str), row
@@ -220,3 +222,4 @@ def test_table1_covers_paper_rows_plus_precopy_extensions():
     assert api.TABLE1[15][2] == "fleet_coordination"
     assert api.TABLE1[16][2] == "live_serving"
     assert api.TABLE1[17][2] == "socket_transport"
+    assert api.TABLE1[18][2] == "cross_job_dedup"

@@ -1,0 +1,326 @@
+"""Cross-job content-addressed chunk store: dedup, refcounted GC, peers.
+
+The shared pool's contract, exercised end to end:
+
+  * a second job dumping the same content moves (almost) no chunk bytes
+    over the wire — the global index answers the dedup probe;
+  * gc run by ONE job can never reap a chunk ANY job's manifest chain
+    still references (the refcount journal lives on the store, so it
+    survives coordinator restarts and protects jobs this process never
+    met);
+  * a dedup probe satisfied by the cross-job index is rechecked against
+    the store before the manifest commits (TOCTOU close) — a stale
+    index entry costs a re-upload, never a restorable-but-wrong image;
+  * a restore placed next to a warm peer pulls chunks from the peer's
+    hot cache (hash-verified) before touching the cold remote, and a
+    lying peer is rejected, not trusted.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chunkindex import RefJournal
+from repro.core.dump import dump
+from repro.core.registry import Registry
+from repro.core.remote import (CachingTier, RemoteTier, RetryPolicy,
+                               SimulatedObjectStore, reset_tier_registry)
+from repro.core.restore import latest_image_id, restore
+from repro.core.storage import MemoryTier, as_tier
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    reset_tier_registry()
+    yield
+    reset_tier_registry()
+
+
+def _tree(seed=0, nleaves=5, n=1500):
+    rng = np.random.default_rng(seed)
+    return {"params": {f"l{i}": rng.standard_normal(n).astype(np.float32)
+                       for i in range(nleaves)},
+            "step": np.int32(seed)}
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(a["params"][k], b["params"][k])
+               for k in a["params"]) and a["step"] == b["step"]
+
+
+def _alias(store, prefix):
+    """One job's view of the shared store: prefixed manifests, global
+    chunk pool."""
+    return RemoteTier(store, prefix=prefix, shared_chunks=True,
+                      retry=RetryPolicy(backoff_base_s=1e-4))
+
+
+# ------------------------------------------------------------ dedup
+def test_cross_job_dedup_moves_no_chunk_bytes():
+    store = SimulatedObjectStore()
+    tree = _tree(1)
+    job_a, job_b = _alias(store, "jobA"), _alias(store, "jobB")
+
+    out_a = dump(tree, job_a, step=1, chunk_bytes=4096)
+    bytes_after_a = store.stats["bytes_in"]
+    out_b = dump(tree, job_b, step=1, chunk_bytes=4096)
+    delta = store.stats["bytes_in"] - bytes_after_a
+
+    # every chunk of B was answered by the global index — only B's
+    # manifest + journal record travelled, not a single chunk byte
+    total = sum(len(r["chunks"]) for r in out_b["records"])
+    assert out_b["stats"]["chunks_deduped"] == total > 0
+    assert delta < bytes_after_a / 4
+    # both jobs restore bit-identically through their own alias
+    for alias in (job_a, job_b):
+        got, _ = restore(alias)
+        assert _trees_equal(tree, got)
+    assert out_a["image_id"] == out_b["image_id"] or True  # ids may differ
+
+
+def test_upload_delta_counts_only_absent_chunks():
+    store = SimulatedObjectStore()
+    job_a, job_b = _alias(store, "jobA"), _alias(store, "jobB")
+    dump(_tree(2), job_a, step=1, chunk_bytes=4096)
+    assert job_a.stats["delta_chunks"] > 0          # cold pool: all travel
+    moved_a = job_a.stats["delta_bytes"]
+    dump(_tree(2), job_b, step=1, chunk_bytes=4096)
+    # warm pool: the delta upload found nothing absent
+    assert job_b.stats["delta_chunks"] == 0
+    assert job_b.stats["delta_bytes"] == 0 < moved_a
+
+
+# ------------------------------------------------------ refcounted gc
+def test_gc_of_one_job_keeps_chunks_the_other_references():
+    """The two-jobs-share-a-base-model regression: job A is reaped in
+    full, job B (bit-identical content, own manifest) must survive A's
+    gc byte-for-byte."""
+    store = SimulatedObjectStore()
+    tree = _tree(3)
+    job_a, job_b = _alias(store, "jobA"), _alias(store, "jobB")
+    dump(tree, job_a, step=1, chunk_bytes=4096)
+    dump(tree, job_b, step=1, chunk_bytes=4096)
+
+    reg_a = Registry(job_a)
+    assert reg_a.truncate_from(0)               # A's manifests all gone
+    out = reg_a.gc()
+    # A's registry sees no manifests of its own, yet reaps NOTHING:
+    # B's journal record holds a reference on every chunk
+    assert out["removed"] == 0 and out["kept"] > 0
+    got, _ = restore(job_b)
+    assert _trees_equal(tree, got)
+
+    # once B retracts too, the pool is actually garbage
+    assert Registry(job_b).truncate_from(0)
+    out = Registry(job_a).gc()
+    assert out["removed"] > 0 and out["kept"] == 0
+
+
+def test_refcount_journal_recovers_after_restart():
+    """The journal is ON the store: a fresh process (new RefJournal, no
+    in-memory cache) recovers every published record and still protects
+    peers' chunks."""
+    store = SimulatedObjectStore()
+    tree = _tree(4)
+    job_a = _alias(store, "jobA")
+    dump(tree, job_a, step=1, chunk_bytes=4096)
+
+    # "restart": brand-new tier alias and journal over the same store
+    fresh = _alias(store, "jobB")
+    journal = fresh.ref_journal()
+    assert journal.recover() == 1
+    assert journal.referenced()                  # refs are non-empty
+    # the restarted coordinator's gc (different namespace, zero local
+    # manifests) keeps everything A published
+    out = Registry(fresh).gc()
+    assert out["removed"] == 0 and out["kept"] > 0
+    got, _ = restore(job_a)
+    assert _trees_equal(tree, got)
+
+
+def test_orphan_refs_sweep_only_when_manifest_is_gone():
+    store = SimulatedObjectStore()
+    job_a = _alias(store, "jobA")
+    dump(_tree(5), job_a, step=1, chunk_bytes=4096)
+    journal = job_a.ref_journal()
+    # a crashed dump: record published, manifest never committed
+    journal.publish("img-torn", {"deadbeef" * 8},
+                    manifest_rel=job_a.manifest_path("img-torn"))
+    assert "deadbeef" * 8 in journal.referenced(reload=True)
+    assert journal.sweep(grace_s=0.0) == 0      # inside grace: kept
+    store.clock.advance(1.0)                    # virtual time passes
+    assert journal.sweep(grace_s=0.5) == 1
+    # the live image's record is untouched (its manifest exists)
+    assert journal.records(reload=True)
+    assert "deadbeef" * 8 not in journal.referenced(reload=True)
+
+
+# ------------------------------------------------------------- TOCTOU
+def test_stale_index_entry_is_recaught_and_reuploaded():
+    """Cross-job dedup probe hit on a chunk that is GONE from the store
+    (index poisoned — e.g. a racing delete this alias never saw): the
+    executor's authoritative recheck re-uploads instead of committing a
+    manifest that references a missing chunk."""
+    store = SimulatedObjectStore()
+    tree = _tree(6)
+    job_a = _alias(store, "jobA")
+    dump(tree, job_a, step=1, chunk_bytes=4096)
+
+    # poison: remove two chunks from the store behind the index's back
+    all_chunks = sorted(
+        n.removesuffix(".bin") for n in store.list("chunks/")
+        if n.endswith(".bin"))
+    victims = all_chunks[:2]
+    for h in victims:
+        store.delete(f"chunks/{h}.bin")
+        with store.shared_index_lock:
+            store.shared_chunk_index.add(h)      # index still claims it
+
+    job_b = _alias(store, "jobB")
+    out = dump(tree, job_b, step=1, chunk_bytes=4096)
+    assert out["stats"]["chunks_reuploaded"] >= len(victims)
+    got, _ = restore(job_b)
+    assert _trees_equal(tree, got)
+    # and the pool really holds the bytes again
+    for h in victims:
+        assert store.head(f"chunks/{h}.bin")
+
+
+def test_verify_chunks_repairs_the_shared_index():
+    store = SimulatedObjectStore()
+    job_a = _alias(store, "jobA")
+    dump(_tree(7), job_a, step=1, chunk_bytes=4096)
+    real = {n.removesuffix(".bin") for n in store.list("chunks/")
+            if n.endswith(".bin")}
+    with store.shared_index_lock:
+        store.shared_chunk_index.add("f00d" * 16)
+    present = job_a.verify_chunks(real | {"f00d" * 16})
+    assert present == real
+    with store.shared_index_lock:
+        assert "f00d" * 16 not in store.shared_chunk_index
+
+
+# ------------------------------------------------- ranged-read caching
+def test_repeated_ranged_faults_cost_at_most_two_cold_reads():
+    """CachingTier ranged-read regression: the first ranged miss pays a
+    cheap ranged GET, the second promotes the whole chunk into hot —
+    afterwards every fault on that chunk is a hot hit. The cold store
+    sees at most 2 GETs per chunk, ever."""
+    store = SimulatedObjectStore()
+    cold = RemoteTier(store, retry=RetryPolicy(backoff_base_s=1e-4))
+    tier = CachingTier(MemoryTier(), cold)
+    blob = np.arange(8192, dtype=np.uint8).tobytes()
+    import hashlib
+    h = hashlib.sha256(blob).hexdigest()
+    cold.write_chunk(h, blob)                   # written cold-only: the
+    gets_before = store.stats["gets"]           # hot front starts empty
+
+    for i in range(6):                          # repeated page faults
+        off = (i * 512) % 4096
+        got = tier.read_chunk_range(h, off, 256)
+        assert got == blob[off:off + 256]
+    assert store.stats["gets"] - gets_before <= 2
+    assert tier.stats["promotions"] == 1
+    assert tier.stats["hot_hits"] >= 4
+    # hot now serves the whole chunk
+    assert bytes(tier.hot.read_chunk(h)) == blob
+
+
+def test_full_read_after_ranged_miss_serves_from_hot():
+    store = SimulatedObjectStore()
+    cold = RemoteTier(store, retry=RetryPolicy(backoff_base_s=1e-4))
+    tier = CachingTier(MemoryTier(), cold)
+    blob = b"q" * 4096
+    import hashlib
+    h = hashlib.sha256(blob).hexdigest()
+    cold.write_chunk(h, blob)
+    tier.read_chunk_range(h, 0, 64)             # miss 1: ranged GET
+    tier.read_chunk_range(h, 64, 64)            # miss 2: promotion
+    gets = store.stats["gets"]
+    assert bytes(tier.read_chunk(h)) == blob    # no further cold GET
+    assert store.stats["gets"] == gets
+
+
+# ------------------------------------------------------- peer fetching
+def _warm_host(store, prefix="jobA"):
+    """A host whose hot front holds every chunk of one dumped image."""
+    tier = CachingTier(MemoryTier(), _alias(store, prefix))
+    tree = _tree(8)
+    dump(tree, tier, step=1, chunk_bytes=4096)
+    return tier, tree
+
+
+def test_restore_prefers_peer_hot_cache_over_cold():
+    store = SimulatedObjectStore()
+    host_a, tree = _warm_host(store)
+    # host B: cold hot-front, same shared pool, peer-wired at A
+    host_b = CachingTier(MemoryTier(), _alias(store, "jobA"),
+                         peers=[host_a.hot])
+    gets_before = store.stats["gets"]
+    got, _ = restore(host_b)
+    assert _trees_equal(tree, got)
+    assert host_b.stats["peer_hits"] > 0
+    # only the manifest chain came from cold — every chunk was a peer hit
+    assert store.stats["gets"] - gets_before <= 2
+
+
+def test_corrupt_peer_is_rejected_and_cold_serves_truth():
+    store = SimulatedObjectStore()
+    host_a, tree = _warm_host(store)
+    # the peer lies: flip every cached chunk's bytes in its hot front
+    for name in host_a.hot.listdir("chunks"):
+        h = name.removesuffix(".bin")
+        real = bytes(host_a.hot.read_chunk(h))
+        host_a.hot.delete_chunk(h)
+        host_a.hot.write_chunk(h, bytes(b ^ 0xFF for b in real))
+    host_b = CachingTier(MemoryTier(), _alias(store, "jobA"),
+                         peers=[host_a.hot])
+    got, _ = restore(host_b)
+    assert _trees_equal(tree, got)              # cold truth wins
+    assert host_b.stats["peer_rejects"] > 0
+    assert host_b.stats["peer_hits"] == 0
+
+
+def test_topology_wires_nearest_peer_fronts():
+    from repro.fleet.topology import ClusterTopology
+    store_name = "xjob-topo"
+    uri = ("cache+remote://{s}?front={h}&prefix=jobA&shared=1"
+           .format(s=store_name, h="{h}"))
+    a = as_tier(uri.format(h="hA"))
+    b = as_tier(uri.format(h="hB"))
+    c = as_tier(uri.format(h="hC"))
+    tree = _tree(9)
+    dump(tree, a, step=1, chunk_bytes=4096)     # only A is warm
+    topo = ClusterTopology()
+    for h in ("hA", "hB", "hC"):
+        topo.add_host(h)
+    topo.set_link("hB", "hA", 0.1)              # A is B's nearest peer
+    topo.set_link("hB", "hC", 5.0)
+    assert topo.nearest_peers("hB") == ["hA", "hC"]
+    assert topo.wire_peer_fetch("hB") == 2
+    got, _ = restore(b)
+    assert _trees_equal(tree, got)
+    assert b.stats["peer_hits"] > 0
+    # an unwired host still works (straight to cold)
+    got, _ = restore(c)
+    assert _trees_equal(tree, got)
+
+
+def test_placement_reports_peer_covered_chunks():
+    from repro.fleet.placement import PlacementDecision
+    d = PlacementDecision(job_id="j", host="h", overlap=0.0,
+                          chunks_total=4, chunks_warm=0, scores={},
+                          chunks_peer=3, peer_hosts=("hA",))
+    assert d.chunks_peer == 3 and d.peer_hosts == ("hA",)
+
+
+# --------------------------------------------------- URI plumbing
+def test_shared_flag_is_part_of_tier_identity():
+    shared = as_tier("remote://xjob-id?prefix=j1&shared=1")
+    plain = as_tier("remote://xjob-id?prefix=j1")
+    assert shared is not plain
+    assert shared.shared_chunks and not plain.shared_chunks
+    # same store, different key namespaces for chunks
+    assert shared.store is plain.store
+    assert shared._k("chunks/ab.bin") == "chunks/ab.bin"
+    assert plain._k("chunks/ab.bin") == "j1/chunks/ab.bin"
+    assert shared._k("images/i/manifest.json") \
+        == "j1/images/i/manifest.json"

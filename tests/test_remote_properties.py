@@ -144,3 +144,104 @@ def test_corruption_remains_typed_under_fault_storms(seed, rate):
     store._objects[key] = b"bitrot" + store._objects[key][6:]
     with pytest.raises(CorruptionError):
         restore(tier)
+
+
+# ------------------------------------------------- cross-job pool path
+def _shared_pair(fail_seed, rate, consec):
+    """Two job aliases over ONE faulty store sharing the global chunk
+    pool (the cross-job dedup path under test)."""
+    store = SimulatedObjectStore(
+        faults=FaultPolicy(seed=fail_seed, fail_rate=rate,
+                           max_consecutive=consec))
+    mk = lambda p: RemoteTier(
+        store, prefix=p, shared_chunks=True,
+        retry=RetryPolicy(attempts=ATTEMPTS, backoff_base_s=1e-4))
+    return mk("jobA"), mk("jobB"), store
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),   # tree seed
+       st.integers(min_value=0, max_value=2**31 - 1),   # fault seed
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=1, max_value=ATTEMPTS - 1))
+def test_cross_job_dedup_survives_fault_storms(
+        tree_seed, fault_seed, rate, consec):
+    """Promise 1 extended to the GLOBAL index path: job B's dump dedups
+    against job A's chunks while the store storms, and BOTH jobs restore
+    bit-identically — a fault can cost retries or a re-upload, never a
+    manifest that references bytes the pool doesn't hold."""
+    tree = _tree(tree_seed, 2, 1500)
+    job_a, job_b, store = _shared_pair(fault_seed, rate, consec)
+    dump(tree, job_a, step=1, chunk_bytes=4 << 10)
+    out_b = dump(tree, job_b, step=1, chunk_bytes=4 << 10)
+    total = sum(len(r["chunks"]) for r in out_b["records"])
+    assert out_b["stats"]["chunks_deduped"] + \
+        out_b["stats"]["chunks_reuploaded"] >= total - \
+        out_b["stats"]["chunks"]
+    for alias in (job_a, job_b):
+        got, _ = restore(alias)
+        for p, leaf in tree["params"].items():
+            assert np.array_equal(got["params"][p], leaf)
+    assert store.pending_multiparts == 0
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=1, max_value=ATTEMPTS - 1))
+def test_gc_under_fault_storm_never_reaps_referenced(
+        tree_seed, fault_seed, rate, consec):
+    """No gc schedule may reap a still-referenced chunk: job A's full
+    retention drop + gc runs mid-storm, then job B restores
+    bit-identically from the shared pool."""
+    from repro.core.registry import Registry
+    tree = _tree(tree_seed, 2, 1500)
+    job_a, job_b, store = _shared_pair(fault_seed, rate, consec)
+    dump(tree, job_a, step=1, chunk_bytes=4 << 10)
+    dump(tree, job_b, step=2, chunk_bytes=4 << 10)
+    reg = Registry(job_a)
+    reg.truncate_from(0)
+    reg.gc()
+    got, _ = restore(job_b)
+    for p, leaf in tree["params"].items():
+        assert np.array_equal(got["params"][p], leaf)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=1, max_value=ATTEMPTS - 1))
+def test_peer_fetch_survives_fault_storms(
+        tree_seed, fault_seed, rate, consec):
+    """Peer-aware restore under a storm on the COLD store: whatever mix
+    of peer hits and cold reads the schedule forces, the restored tree
+    is bit-identical (peer bytes are hash-verified; cold reads retry)."""
+    tree = _tree(tree_seed, 2, 1500)
+    job_a, _, store = _shared_pair(fault_seed, rate, consec)
+    warm = CachingTier(MemoryTier(), job_a)
+    dump(tree, warm, step=1, chunk_bytes=4 << 10)
+    cold_front = CachingTier(MemoryTier(), job_a, peers=[warm.hot])
+    got, _ = restore(cold_front)
+    for p, leaf in tree["params"].items():
+        assert np.array_equal(got["params"][p], leaf)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=ATTEMPTS, max_value=ATTEMPTS + 3))
+def test_cross_job_budget_exhaustion_is_typed(tree_seed, failures):
+    """Promise 2 on the shared pool: when the storm out-fails the retry
+    budget mid-dedup-upload, job B raises TransferError and commits no
+    manifest — job A's image stays whole and restorable."""
+    tree_a = _tree(tree_seed, 2, 1500)
+    tree_b = _tree(tree_seed + 1, 2, 1500)      # different content:
+    job_a, job_b, store = _shared_pair(0, 0.0, 1)  # B must upload
+    dump(tree_a, job_a, step=1, chunk_bytes=2 << 10)
+    store.faults = FaultPolicy(seed=1, fail_rate=1.0,
+                               fixed_failures=failures)
+    with pytest.raises(TransferError):
+        dump(tree_b, job_b, step=1, chunk_bytes=2 << 10)
+    store.faults = FaultPolicy()
+    assert store.pending_multiparts == 0
+    assert latest_image_id(job_b) is None       # no torn B image
+    got, _ = restore(job_a)                     # A untouched
+    for p, leaf in tree_a["params"].items():
+        assert np.array_equal(got["params"][p], leaf)

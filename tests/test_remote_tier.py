@@ -121,7 +121,9 @@ def test_multipart_geometry_and_roundtrip():
     assert t.read_bytes("chunks/big.bin") == data
     nparts = -(-len(data) // (1 << 10))
     assert t.stats == {"retries": 0, "parts_uploaded": nparts,
-                       "multipart_uploads": 1, "singlepart_uploads": 0}
+                       "multipart_uploads": 1, "singlepart_uploads": 0,
+                       "delta_batches": 0, "delta_chunks": 0,
+                       "delta_bytes": 0}
     assert store.stats["mp_completed"] == 1
     t.write_bytes("images/i/manifest.json", b"{}")      # small: single put
     assert t.stats["singlepart_uploads"] == 1
@@ -265,7 +267,9 @@ def test_write_through_and_read_through_fill():
     assert c2.read_bytes("chunks/aa.bin") == b"data"        # fills...
     assert c2.read_bytes("chunks/aa.bin") == b"data"
     assert store.stats["gets"] == gets + 1                  # ...once
-    assert c2.stats == {"hot_hits": 1, "cold_reads": 1, "fills": 1}
+    assert c2.stats == {"hot_hits": 1, "cold_reads": 1, "fills": 1,
+                        "range_misses": 0, "promotions": 0,
+                        "peer_hits": 0, "peer_rejects": 0}
 
 
 def test_dedup_probe_answered_from_cache_index():
